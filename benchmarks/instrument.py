@@ -1,0 +1,108 @@
+"""Instruction-counting backend: the architecture-independent cost model.
+
+CPython's GIL serializes execution, so wall-clock alone under-reports the
+fence/RMW asymmetry the paper exploits on real hardware.  We therefore also
+count the *instruction mix* per high-level operation (reads, writes, RMWs,
+lock acquisitions) — the quantities the paper's theory speaks to — and
+report them next to wall time.  RMW cells in the thread backend use a
+mutex, so wall time still reflects part of the hardware asymmetry.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.core import UNINIT
+from repro.core.backend import (
+    ArrayCells,
+    Cell,
+    MapCells,
+    RMWCell,
+    RMWMapCells,
+    ThreadBackend,
+)
+
+
+class Counts:
+    __slots__ = ("reads", "writes", "rmws", "locks")
+
+    def __init__(self):
+        self.reads = self.writes = self.rmws = self.locks = 0
+
+    def snapshot(self):
+        return dict(reads=self.reads, writes=self.writes, rmws=self.rmws, locks=self.locks)
+
+    def __repr__(self):
+        return f"R={self.reads} W={self.writes} RMW={self.rmws} L={self.locks}"
+
+
+def _wrap(cls, counts: Counts):
+    class Wrapped(cls):  # type: ignore[misc]
+        def read(self, *a, **k):
+            counts.reads += 1
+            return super().read(*a, **k)
+
+        def write(self, *a, **k):
+            counts.writes += 1
+            return super().write(*a, **k)
+
+        def cas(self, *a, **k):
+            counts.rmws += 1
+            return super().cas(*a, **k)
+
+        def swap(self, *a, **k):
+            counts.rmws += 1
+            return super().swap(*a, **k)
+
+        def fetch_add(self, *a, **k):
+            counts.rmws += 1
+            return super().fetch_add(*a, **k)
+
+        def write_max(self, *a, **k):
+            counts.rmws += 1
+            return super().write_max(*a, **k)
+
+    Wrapped.__name__ = "Counting" + cls.__name__
+    return Wrapped
+
+
+class _CountingLock:
+    def __init__(self, counts: Counts):
+        import threading
+
+        self.counts = counts
+        self._lock = threading.Lock()
+
+    def __enter__(self):
+        self.counts.locks += 1
+        self._lock.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self._lock.release()
+        return False
+
+
+class CountingBackend(ThreadBackend):
+    name = "counting"
+
+    def __init__(self):
+        self.counts = Counts()
+
+    def cell(self, init: Any = None):
+        return _wrap(Cell, self.counts)(init)
+
+    def rmw_cell(self, init: Any = None):
+        return _wrap(RMWCell, self.counts)(init)
+
+    def array(self, size: int, init: Any = None):
+        return _wrap(ArrayCells, self.counts)(size, init)
+
+    def map_cells(self, default: Any = UNINIT):
+        return _wrap(MapCells, self.counts)(default)
+
+    def rmw_map_cells(self, default: Any = UNINIT):
+        return _wrap(RMWMapCells, self.counts)(default)
+
+    def lock(self):
+        return _CountingLock(self.counts)

@@ -1,0 +1,90 @@
+"""Render the roofline table from the dry-run JSONL records."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.jsonl")
+
+
+def load(path: str = RESULTS) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    # newest record wins per (arch, shape, mesh, ws_mode)
+    dedup = {}
+    for r in out:
+        dedup[(r["arch"], r["shape"], r["mesh"], r.get("ws_mode"))] = r
+    return list(dedup.values())
+
+
+def table(rows: List[dict], mesh: str = "16x16") -> str:
+    cols = (
+        "arch", "shape", "compute_s", "memory_s", "collective_s",
+        "bottleneck", "useful_flops_ratio", "fit",
+    )
+    lines = [",".join(cols)]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh or r.get("plan") != "run" or r.get("ws_mode"):
+            continue
+        if "compute_s" not in r:
+            continue
+        mem = r.get("memory", {})
+        dev_bytes = (
+            mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+        )
+        fit = "yes" if dev_bytes and dev_bytes < 16e9 else f"no({dev_bytes/1e9:.0f}GB)"
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['compute_s']:.4f},{r['memory_s']:.4f},"
+            f"{r['collective_s']:.4f},{r['bottleneck'].replace('_s','')},"
+            f"{r['useful_flops_ratio']:.3f},{fit}"
+        )
+    skipped = [r for r in rows if r.get("plan", "").startswith("skip") and r["mesh"] == mesh]
+    for r in sorted(skipped, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(f"{r['arch']},{r['shape']},-,-,-,SKIP,-,-")
+    return "\n".join(lines)
+
+
+def perf_table(path=None) -> str:
+    """§Perf iteration records (tagged re-runs) vs their baselines."""
+    path = path or os.path.join(os.path.dirname(__file__), "results", "perf.jsonl")
+    rows = load(path)
+    base = {(r["arch"], r["shape"]): r for r in load() if r["mesh"] == "16x16"}
+    lines = ["tag,arch,shape,compute_s,memory_s,collective_s,useful_ratio,(baseline mem_s)"]
+    for r in sorted(rows, key=lambda r: (r.get("tag") or "", r["arch"], r["shape"])):
+        if "compute_s" not in r or r["mesh"] != "16x16":
+            continue
+        b = base.get((r["arch"], r["shape"]), {})
+        lines.append(
+            f"{r.get('tag','')},{r['arch']},{r['shape']},{r['compute_s']:.4f},"
+            f"{r['memory_s']:.4f},{r['collective_s']:.4f},"
+            f"{r['useful_flops_ratio']:.3f},({b.get('memory_s', float('nan')):.2f})"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    rows = load()
+    if not rows:
+        print("no dry-run records yet (run scripts/run_dryrun_sweep.sh)")
+        return []
+    print("== roofline (single-pod 16x16) ==")
+    print(table(rows, "16x16"))
+    multi = [r for r in rows if r["mesh"] == "2x16x16" and r.get("plan") == "run"]
+    print(f"\n== multi-pod 2x16x16: {len(multi)} cells compiled ==")
+    pt = perf_table()
+    if pt.count("\n"):
+        print("\n== §Perf iterations (tagged) vs baseline ==")
+        print(pt)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Benchmark orchestrator — one section per paper table/figure + the
+framework-level benches.  CSV lines to stdout (tee'd to bench_output.txt).
+
+Sections:
+  [zero-cost]      paper Fig 9a/9b — put-take / put-steal µs/op + instr mix
+  [spanning-tree]  paper Table 1 / Figs 10-14 — speedups per graph x algo
+  [scheduler]      L1 TPU adaptation — lockstep rounds + async makespan
+  [loader]         L2 host pipeline — work-stealing loader throughput
+  [roofline]       dry-run roofline table (if results/dryrun.jsonl exists)
+
+`python -m benchmarks.run --quick` shrinks sizes for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--sections", default="zero-cost,spanning-tree,scheduler,loader,roofline")
+    args = ap.parse_args(argv)
+    sections = set(args.sections.split(","))
+    t0 = time.time()
+
+    if "zero-cost" in sections:
+        print("\n== [zero-cost] put-take / put-steal (paper Fig 9) ==")
+        from . import zero_cost
+
+        zero_cost.main(n_ops=20_000 if args.quick else 100_000)
+
+    if "spanning-tree" in sections:
+        print("\n== [spanning-tree] parallel spanning tree (paper Table 1) ==")
+        from . import spanning_tree
+
+        spanning_tree.main(scale=4_000 if args.quick else 40_000)
+
+    if "scheduler" in sections:
+        print("\n== [scheduler] L1 work-stealing microbatch scheduler ==")
+        from . import scheduler
+
+        scheduler.main()
+
+    if "loader" in sections:
+        print("\n== [loader] L2 work-stealing data loader ==")
+        import numpy as np
+
+        from repro.configs import get_config
+        from repro.data import WorkStealingLoader, make_batch
+        from repro.models.config import SHAPES
+
+        cfg = get_config("llama3.2-3b", smoke=True)
+        n_tasks = 16 if args.quick else 48
+
+        def prepare(tid):
+            return make_batch(cfg, SHAPES["train_4k"], step=tid, n_rows=1)
+
+        for workers in (1, 2, 4):
+            t = time.time()
+            loader = WorkStealingLoader(prepare, n_tasks=n_tasks, n_workers=workers).start()
+            loader.batches(timeout=120)
+            dt = time.time() - t
+            print(
+                f"loader,workers={workers},tasks={n_tasks},sec={dt:.2f},"
+                f"extractions={loader.stats['extractions']},dups={loader.stats['duplicates']}"
+            )
+
+    if "roofline" in sections:
+        print("\n== [roofline] dry-run roofline table ==")
+        from . import roofline
+
+        roofline.main()
+
+    print(f"\n[benchmarks] done in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,103 @@
+"""L1 scheduler benchmark: the paper's trade-off, measured at TPU scale.
+
+Two regimes:
+
+* lockstep (SPMD reality): repro.sched.run_lockstep_rounds — rounds to
+  drain a skewed task set, duplicate ratio, blocking vs async collectives,
+  per mode (static / ws-mult / ws-mult-ranked / ws-wmult / ws-wmult-deque).
+
+* asynchronous (event-driven model): repro.sched.async_makespan — makespan
+  and efficiency with stragglers, where ws-mult pays a sync cost per pick
+  (the MaxRegister/blocking-collective price) and ws-wmult picks free on a
+  stale board (the RangeMaxRegister/fence-free price: bounded duplicates).
+
+This is the paper's zero-cost/fence-free story mapped onto the scheduler:
+"fences" = blocking collectives; WS-WMULT = collective-free fast path.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.sched import MODES, async_makespan, run_lockstep_rounds
+
+
+def skewed_tails(n_queues: int, n_tasks: int, skew: float, seed: int = 0) -> np.ndarray:
+    rng = np.random.RandomState(seed)
+    w = rng.dirichlet(np.full(n_queues, 1.0 / max(skew, 1e-3)))
+    tails = np.floor(w * n_tasks).astype(np.int64)
+    while tails.sum() < n_tasks:
+        tails[rng.randint(n_queues)] += 1
+    return tails
+
+
+def bench_lockstep(n_workers: int = 16, tasks_per: int = 4, skews=(0.25, 1.0, 4.0)) -> List[dict]:
+    rows = []
+    n_tasks = n_workers * tasks_per
+    for skew in skews:
+        tails = skewed_tails(n_workers, n_tasks, skew)
+        for mode in MODES:
+            _, counts, stats = run_lockstep_rounds(tails, n_workers, mode=mode, sync_every=1)
+            rows.append(
+                dict(
+                    regime="lockstep", skew=skew, mode=mode,
+                    rounds=stats.rounds_used,
+                    ideal_rounds=tasks_per,
+                    dup_ratio=round(stats.duplicate_ratio, 4),
+                    idle=stats.idle_worker_rounds,
+                    blocking_coll=stats.blocking_collectives,
+                    async_coll=stats.async_collectives,
+                    coverage=float((counts > 0).mean()),
+                )
+            )
+    return rows
+
+
+def bench_async(
+    n_workers: int = 64,
+    tasks_per: int = 8,
+    straggler_frac: float = 0.06,
+    straggler_slow: float = 4.0,
+    modes=("static", "ws-mult", "ws-wmult", "b-ws-wmult"),
+    seed: int = 0,
+) -> List[dict]:
+    rows = []
+    rng = np.random.RandomState(seed)
+    n_tasks = n_workers * tasks_per
+    durations = rng.lognormal(mean=0.0, sigma=0.4, size=n_tasks) * 1e-3
+    owner = np.repeat(np.arange(n_workers), tasks_per)
+    speed = np.ones(n_workers)
+    n_strag = max(int(straggler_frac * n_workers), 1)
+    speed[rng.choice(n_workers, n_strag, replace=False)] = 1.0 / straggler_slow
+    for mode in modes:
+        r = async_makespan(
+            durations, owner, n_workers, mode=mode, worker_speed=speed, seed=seed
+        )
+        rows.append(
+            dict(
+                regime="async", mode=mode,
+                makespan_ms=round(1e3 * r.makespan, 3),
+                ideal_ms=round(1e3 * r.ideal, 3),
+                efficiency=round(r.efficiency, 4),
+                duplicates=r.duplicates,
+                picks=r.picks,
+                sync_ms=round(1e3 * r.sync_time, 3),
+            )
+        )
+    return rows
+
+
+def main():
+    rows = bench_lockstep() + bench_async()
+    keys = ["regime", "mode", "skew", "rounds", "dup_ratio", "blocking_coll",
+            "async_coll", "makespan_ms", "efficiency", "duplicates", "sync_ms"]
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Serve a small model with batched requests through the work-stealing
+frontend (paper's queues scheduling real inference).
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+sys.exit(main(["--arch", "llama3.2-3b", "--requests", "10", "--replicas", "2"]))

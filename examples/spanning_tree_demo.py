@@ -1,0 +1,22 @@
+"""The paper's application (§8): parallel spanning tree via work-stealing.
+
+    PYTHONPATH=src python examples/spanning_tree_demo.py [--scale 20000]
+"""
+import argparse, sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.spanning_tree import GRAPHS, spanning_tree
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--scale", type=int, default=20_000)
+ap.add_argument("--graph", default="2d-torus", choices=list(GRAPHS))
+args = ap.parse_args()
+
+adj = GRAPHS[args.graph](args.scale)
+print(f"graph={args.graph} vertices={len(adj)}")
+for algo in ("ws-wmult", "b-ws-wmult", "chase-lev", "idempotent-fifo"):
+    for nt in (1, 2, 4):
+        dt, stats = spanning_tree(adj, algo, nt)
+        print(f"  {algo:16s} threads={nt}: {dt:.3f}s valid={stats['valid']} "
+              f"reached={stats['reached']}/{len(adj)}")

@@ -1,0 +1,10 @@
+"""repro.checkpoint — atomic sharded checkpoints + elastic resharding."""
+
+from .checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    restore,
+    save,
+)
+
+__all__ = ["AsyncCheckpointer", "latest_step", "restore", "save"]

@@ -1,0 +1,58 @@
+"""Assigned-architecture registry: ``--arch <id>`` resolves here.
+
+Each module exports CONFIG (the exact assigned full-size config) and SMOKE
+(a reduced same-family config for CPU smoke tests).  ``cell_plan(cfg)``
+returns which of the four assigned input shapes run vs. skip (with the
+reason), per the mandate's sub-quadratic / encoder-decoder rules.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+
+ARCH_IDS = (
+    "llama3.2-3b",
+    "h2o-danube-1.8b",
+    "minicpm-2b",
+    "gemma3-12b",
+    "deepseek-v2-236b",
+    "kimi-k2-1t-a32b",
+    "pixtral-12b",
+    "whisper-base",
+    "mamba2-2.7b",
+    "zamba2-2.7b",
+)
+
+_MOD = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in _MOD:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(ARCH_IDS)}")
+    mod = importlib.import_module(f"repro.configs.{_MOD[arch]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def cell_plan(cfg: ModelConfig) -> Dict[str, str]:
+    """shape name -> 'run' or 'skip: <reason>' (see DESIGN.md §4/§7)."""
+    plan = {}
+    for name, sh in SHAPES.items():
+        if cfg.family == "encdec" and sh.kind == "decode":
+            plan[name] = (
+                "skip: encoder-decoder audio backbone has no 32k/500k decode "
+                "context (whisper native decoder ctx 448)"
+            )
+            continue
+        if name == "long_500k":
+            windowed = any(w > 0 for w in cfg.layer_windows)
+            if cfg.family not in ("ssm", "hybrid") and not windowed:
+                plan[name] = (
+                    "skip: pure full-attention arch; 500k decode needs "
+                    "sub-quadratic attention (mandate rule)"
+                )
+                continue
+        plan[name] = "run"
+    return plan

@@ -1,0 +1,23 @@
+"""kimi-k2-1t-a32b — trillion-parameter MoE [arXiv:2501.kimi2; unverified].
+
+61L d_model=7168 64H (GQA kv=8) d_ff(expert)=2048 vocab=163840;
+MoE 384 routed top-8 + 1 shared expert.  Trains with the factored-second-
+moment optimizer + ZeRO over ("data","pod") — AdamW fp32 states for 1T
+params exceed 2 v5e pods (see EXPERIMENTS.md §Dry-run).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8,
+    d_ff=2048, vocab_size=163840,
+    n_experts=384, n_shared_experts=1, top_k=8, moe_d_ff=2048,
+    dtype="bfloat16",
+)
+
+SMOKE = ModelConfig(
+    name="kimi-k2-1t-a32b-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=32, vocab_size=256,
+    n_experts=8, n_shared_experts=1, top_k=2, moe_d_ff=32, capacity_factor=8.0,
+    )

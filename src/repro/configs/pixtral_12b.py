@@ -1,0 +1,22 @@
+"""pixtral-12b — VLM: pixtral-ViT + mistral-nemo backbone
+[hf:mistralai/Pixtral-12B-2409; unverified].
+
+40L d_model=5120 32H (GQA kv=8) d_ff=14336 vocab=131072.  Per the mandate
+the ViT frontend is a STUB: input_specs()/the data pipeline provide
+precomputed patch embeddings [B, n_patches, d_model] prepended to the text
+sequence; loss is over text positions only.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b", family="vlm",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab_size=131072, frontend="patch", n_patches=256,
+    rope_theta=1_000_000.0, dtype="bfloat16",
+)
+
+SMOKE = ModelConfig(
+    name="pixtral-12b-smoke", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab_size=256, frontend="patch", n_patches=4,
+)

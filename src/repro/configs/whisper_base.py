@@ -1,0 +1,23 @@
+"""whisper-base — encoder-decoder audio backbone [arXiv:2212.04356; unverified].
+
+6L enc + 6L dec, d_model=512 8H d_ff=2048 vocab=51865.  The conv frontend
+is a STUB per the mandate: input_specs() provides precomputed frame
+embeddings [B, 1500, 512] to the encoder.  decode_32k/long_500k skip
+(native decoder context 448) — see configs.cell_plan.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base", family="encdec",
+    n_layers=6, n_enc_layers=6, n_dec_layers=6,
+    d_model=512, n_heads=8, n_kv_heads=8,
+    d_ff=2048, vocab_size=51865, frontend="frames", enc_seq_len=1500,
+    dtype="bfloat16",
+)
+
+SMOKE = ModelConfig(
+    name="whisper-base-smoke", family="encdec",
+    n_layers=2, n_enc_layers=2, n_dec_layers=2,
+    d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab_size=256, frontend="frames", enc_seq_len=16,
+)

@@ -1,0 +1,77 @@
+"""repro.core — the paper's contribution: fence-free work-stealing with multiplicity.
+
+Faithful shared-memory algorithms (WS-MULT, WS-WMULT, bounded variants, the
+MaxRegister/RangeMaxRegister objects they reduce to, and the THE Cilk /
+Chase-Lev / Idempotent baselines), runnable on real threads or under the
+deterministic interleaving simulator.  The JAX/TPU adaptation of the same
+synchronization structure lives in :mod:`repro.sched`.
+"""
+
+from .backend import (
+    BOTTOM,
+    EMPTY,
+    UNINIT,
+    SimBackend,
+    SimController,
+    ThreadBackend,
+    set_sim_pid,
+)
+from .baselines import ChaseLev, IdempotentDeque, IdempotentFIFO, IdempotentLIFO, TheCilk
+from .bounded import BWSMult, BWSWMult, ExactWS
+from .max_register import AtomicMaxRegister, RangeMaxRegister, TreeMaxRegister
+from .storage import GrowableStore, InfiniteStore, LinkedStore, make_store
+from .ws_mult import WSMult
+from .ws_wmult import WSWMult
+
+# Registry used by tests / benchmarks.  Each factory takes (backend=None, **kw).
+ALGORITHMS = {
+    "ws-mult": WSMult,
+    "ws-wmult": WSWMult,
+    "b-ws-mult": BWSMult,
+    "b-ws-wmult": BWSWMult,
+    "exact-ws": ExactWS,
+    "chase-lev": ChaseLev,
+    "the-cilk": TheCilk,
+    "idempotent-fifo": IdempotentFIFO,
+    "idempotent-lifo": IdempotentLIFO,
+    "idempotent-deque": IdempotentDeque,
+}
+
+# Algorithms whose relaxation guarantees each *process* extracts a task at
+# most once (the paper's multiplicity family).
+MULTIPLICITY_FAMILY = ("ws-mult", "ws-wmult", "b-ws-mult", "b-ws-wmult")
+# Exactly-once algorithms (ground truth).
+EXACT_FAMILY = ("exact-ws", "chase-lev", "the-cilk")
+# At-least-once with unbounded duplicates (idempotent relaxation).
+IDEMPOTENT_FAMILY = ("idempotent-fifo", "idempotent-lifo", "idempotent-deque")
+
+__all__ = [
+    "ALGORITHMS",
+    "MULTIPLICITY_FAMILY",
+    "EXACT_FAMILY",
+    "IDEMPOTENT_FAMILY",
+    "AtomicMaxRegister",
+    "BOTTOM",
+    "BWSMult",
+    "BWSWMult",
+    "ChaseLev",
+    "EMPTY",
+    "ExactWS",
+    "GrowableStore",
+    "IdempotentDeque",
+    "IdempotentFIFO",
+    "IdempotentLIFO",
+    "InfiniteStore",
+    "LinkedStore",
+    "RangeMaxRegister",
+    "SimBackend",
+    "SimController",
+    "TheCilk",
+    "ThreadBackend",
+    "TreeMaxRegister",
+    "UNINIT",
+    "WSMult",
+    "WSWMult",
+    "make_store",
+    "set_sim_pid",
+]

@@ -1,0 +1,114 @@
+"""Task-array storage schemes (paper §6: implementing infinite-length arrays).
+
+All the paper's queues address ``Tasks`` with *absolute, monotonically
+increasing* 1-based indices and every slot is written at most a couple of
+times by the owner only (a task value, or ⊥) — no wraparound.  That write-once
+discipline is what makes the three schemes below interchangeable:
+
+* ``InfiniteStore``   — the idealized infinite array used in §3–§5 analysis
+                        (dict-backed; missing entries read as UNINIT so that
+                        tests catch reads of never-initialized memory).
+* ``GrowableStore``   — §6 approach (1): a finite array that the owner copies
+                        into a double-size array when full.  Put stays
+                        wait-free but with unbounded step complexity.  Thieves
+                        may keep reading a *stale* array object; that is safe
+                        because slots are write-once and copied verbatim.
+* ``LinkedStore``     — §6 approach (2): a linked list of fixed-size node
+                        arrays; the owner links a fresh node when the current
+                        one fills.  Put stays wait-free with O(1) steps.  An
+                        absolute index maps to (node, offset); we follow the
+                        paper in making that mapping O(1).
+
+Only the owner calls :meth:`write`; owner and thieves call :meth:`read`.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from .backend import ThreadBackend, UNINIT
+
+
+class InfiniteStore:
+    def __init__(self, backend, default: Any = UNINIT):
+        self.cells = backend.map_cells(default)
+
+    def read(self, i: int, pid: int = 0) -> Any:
+        return self.cells.read(i, pid)
+
+    def write(self, i: int, v: Any, pid: int = 0) -> None:
+        self.cells.write(i, v, pid)
+
+
+class GrowableStore:
+    """Copy-double finite array (§6 approach 1). 1-based absolute indices."""
+
+    def __init__(self, backend, initial_len: int = 256, default: Any = UNINIT):
+        self.backend = backend
+        self.default = default
+        # The array *reference* is itself a shared register: the owner swings
+        # it after copying; thieves snapshot it with a single read.
+        self.ref = backend.cell(backend.array(initial_len, default))
+
+    def read(self, i: int, pid: int = 0) -> Any:
+        arr = self.ref.read(pid)
+        if i - 1 >= arr.size:
+            # Thief raced ahead of an expansion it has not observed; the
+            # freshest array also has nothing there yet -> reads as default.
+            return self.default
+        return arr.read(i - 1, pid)
+
+    def write(self, i: int, v: Any, pid: int = 0) -> None:
+        arr = self.ref.read(pid)
+        if i - 1 >= arr.size:
+            new_len = arr.size
+            while i - 1 >= new_len:
+                new_len *= 2
+            new = self.backend.array(new_len, self.default)
+            for j in range(arr.size):  # owner-only copy
+                new.write(j, arr.read(j, pid), pid)
+            self.ref.write(new, pid)
+            arr = new
+        arr.write(i - 1, v, pid)
+
+
+class LinkedStore:
+    """Linked list of fixed-size node arrays (§6 approach 2).
+
+    ``node_table`` plays the role of the chain of next-pointers: entry k holds
+    the k-th node's array, written exactly once by the owner when it links the
+    node.  Index i (1-based) lives at node (i-1)//node_len, offset (i-1)%node_len
+    — comparing / incrementing indices is O(1) as required by the paper.
+    """
+
+    def __init__(self, backend, node_len: int = 256, default: Any = UNINIT):
+        self.backend = backend
+        self.node_len = node_len
+        self.default = default
+        self.node_table = backend.map_cells(default=None)
+        self.node_table.write(0, backend.array(node_len, default))
+
+    def read(self, i: int, pid: int = 0) -> Any:
+        node = self.node_table.read((i - 1) // self.node_len, pid)
+        if node is None:
+            return self.default  # thief ahead of the owner's link step
+        return node.read((i - 1) % self.node_len, pid)
+
+    def write(self, i: int, v: Any, pid: int = 0) -> None:
+        k = (i - 1) // self.node_len
+        node = self.node_table.read(k, pid)
+        if node is None:  # owner links a fresh node: O(1) steps
+            node = self.backend.array(self.node_len, self.default)
+            self.node_table.write(k, node, pid)
+        node.write((i - 1) % self.node_len, v, pid)
+
+
+def make_store(kind: str, backend=None, **kw):
+    backend = backend if backend is not None else ThreadBackend()
+    if kind == "infinite":
+        return InfiniteStore(backend, **kw)
+    if kind == "growable":
+        return GrowableStore(backend, **kw)
+    if kind == "linked":
+        return LinkedStore(backend, **kw)
+    raise ValueError(f"unknown store kind: {kind!r}")

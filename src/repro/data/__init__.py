@@ -1,0 +1,6 @@
+"""repro.data — deterministic synthetic corpus + work-stealing host loader."""
+
+from .synthetic import SyntheticCorpus, make_batch, pack_documents
+from .loader import WorkStealingLoader
+
+__all__ = ["SyntheticCorpus", "WorkStealingLoader", "make_batch", "pack_documents"]

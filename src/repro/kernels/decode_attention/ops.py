@@ -1,0 +1,15 @@
+"""jit'd wrapper for the split-K decode attention kernel (inference-only:
+no VJP needed — decode never backprops)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import decode_attention as _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def decode_attention(q, k, v, pos, *, window: int = 0, bk: int = 512, interpret: bool = True):
+    return _kernel(q, k, v, pos, window=window, bk=bk, interpret=interpret)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for single-token decode attention (GQA, length-masked)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, pos, window: int = 0):
+    """q: [B, H, hd]; k, v: [B, Hkv, S, hd]; pos: scalar int32.
+
+    Attends over slots [0, pos] (and within `window` if > 0).
+    Returns [B, H, hd].
+    """
+    B, H, hd = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = H // Hkv
+    kf = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), kf) * hd**-0.5
+    kpos = jnp.arange(S)
+    valid = kpos <= pos
+    if window > 0:
+        valid &= pos - kpos < window
+    s = jnp.where(valid[None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p, vf).astype(q.dtype)

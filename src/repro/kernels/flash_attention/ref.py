@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA, causal, window)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax.nn
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [B, H, S, hd]; k, v: [B, Hkv, S, hd].  Materializes the full score
+    matrix — oracle only, O(S^2) memory.
+    """
+    B, H, S, hd = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    kf = jnp.repeat(k, G, axis=1)
+    vf = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf.astype(jnp.float32))
+    s = s * hd**-0.5
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the SSD (Mamba-2) chunked scan kernel.
+
+Sequential per-timestep recurrence — the ground truth the chunked forms
+(models.ssm.ssd_chunked and the Pallas kernel) must match:
+
+    S_t = exp(dt_t * A) * S_{t-1} + dt_t * x_t (outer) B_t
+    y_t = C_t . S_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C):
+    """x: [b, S, H, P]; dt: [b, S, H]; A: [H]; B, C: [b, S, N].
+
+    Returns (y: [b, S, H, P], final_state: [b, H, P, N]) in float32.
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    def step(state, ins):
+        xt, dtt, Bt, Ct = ins  # [b,H,P], [b,H], [b,N], [b,N]
+        decay = jnp.exp(dtt * A)  # [b,H]
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, Bt)
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct)
+        return state, y
+
+    s0 = jnp.zeros((b, H, P, N), jnp.float32)
+    final, ys = jax.lax.scan(
+        step,
+        s0,
+        (
+            xf.transpose(1, 0, 2, 3),
+            dtf.transpose(1, 0, 2),
+            Bf.transpose(1, 0, 2),
+            Cf.transpose(1, 0, 2),
+        ),
+    )
+    return ys.transpose(1, 0, 2, 3), final

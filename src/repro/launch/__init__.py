@@ -1,0 +1,1 @@
+"""repro.launch — meshes, input specs, jitted steps, dry-run, train/serve."""

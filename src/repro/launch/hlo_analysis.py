@@ -1,0 +1,251 @@
+"""Post-SPMD HLO analysis: per-device collective bytes, FLOPs and HBM bytes
+— all TRIP-COUNT AWARE.
+
+XLA's `compiled.cost_analysis()` counts each `while` body ONCE, so a
+scan-over-layers program under-reports flops/bytes by ~n_layers; and it
+reports no collective traffic at all.  We therefore parse
+`compiled.as_text()` (the post-SPMD, post-fusion per-device module):
+
+* split the module into computations,
+* per computation, tally
+    - collective operand bytes per kind (operand sizes resolved from their
+      defining instructions; result size as fallback),
+    - dot/convolution FLOPs (2 * prod(output dims) * prod(contracting
+      dims), read off the dot_dimension_numbers),
+    - HBM traffic: operands + result of every fusion/dot/conv/copy/
+      elementwise instruction (post-fusion, a fusion's operands/result ARE
+      its memory traffic),
+* walk the call graph from ENTRY, multiplying everything inside `while`
+  bodies by the loop trip count (recovered from the condition's compare
+  constant — exact for lax.scan/fori, the only loops this stack emits).
+
+All counts are PER DEVICE (the compiled module is the per-device SPMD
+program).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^{]*)?\{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+([a-z0-9\-]+)")
+_CONST = re.compile(r"=\s*s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = _COMP_HEADER.match(line.strip()) if line.strip().endswith("{") else None
+        if m and ("(" in line and "->" in line):
+            name = m.group(2)
+            cur = comps.setdefault(name, [])
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            cur.append(line)
+    return comps
+
+
+_COMMENT = re.compile(r"/\*.*?\*/")
+_SKIP_MEM = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "call", "conditional", "after-all", "iota",
+}
+_CALL_OPS = {"fusion", "call", "conditional", "custom-call", "reduce", "sort", "scatter", "map"}
+
+
+def _shape_dims(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _elems(text: str) -> int:
+    n = 0
+    for _, dims in _shape_dims(text):
+        e = 1
+        for d in dims:
+            e *= d
+        n += e
+    return n
+
+
+def analyze(hlo: str) -> Dict[str, object]:
+    """Trip-aware per-device analysis: collectives per kind, dot FLOPs,
+    HBM bytes.  Returns dict(per_kind, collective_bytes, flops, mem_bytes)."""
+    comps = _split_computations(hlo)
+
+    shapes: Dict[str, Dict[str, str]] = {}  # comp -> instr -> type text
+    colls: Dict[str, List[Tuple[str, int]]] = {}
+    flops_c: Dict[str, float] = {}
+    mem_c: Dict[str, float] = {}
+    edges: Dict[str, List[Tuple[str, str]]] = {}  # comp -> [(callee, cond)]
+
+    # fusions rooted in dynamic-update-slice alias their buffer in place:
+    # traffic is the slice, not the buffer.
+    fused_root: Dict[str, str] = {}
+    for cname, lines in comps.items():
+        for ln in lines:
+            if ln.strip().startswith("ROOT"):
+                m = _INSTR.match(_COMMENT.sub("", ln))
+                if m:
+                    fused_root[cname] = m.group(3)
+
+    for cname, lines in comps.items():
+        ty_of = shapes.setdefault(cname, {})
+        for ln in lines:
+            m = _INSTR.match(_COMMENT.sub("", ln))
+            if m:
+                ty_of[m.group(1)] = m.group(2)
+        cl = colls.setdefault(cname, [])
+        ed = edges.setdefault(cname, [])
+        fl = 0.0
+        mb = 0.0
+        for raw in lines:
+            ln = _COMMENT.sub("", raw)
+            m = _INSTR.match(ln)
+            if not m:
+                continue
+            name, ty, opcode = m.groups()
+            rest = ln[m.end():]
+            opnds = []
+            om = re.match(r"\s*\((.*?)\)", rest)
+            if om:
+                opnds = [o.strip().lstrip("%") for o in om.group(1).split(",") if o.strip()]
+
+            kind = next(
+                (k for k in _COLLECTIVES if opcode == k or opcode == k + "-start"), None
+            )
+            if kind:
+                ob = sum(_shape_bytes(ty_of.get(o, "")) for o in opnds)
+                cl.append((kind, ob if ob else _shape_bytes(ty)))
+
+            if opcode == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ln)
+                cm = re.search(r"condition=%?([\w.\-]+)", ln)
+                if bm and cm:
+                    ed.append((bm.group(1), cm.group(1)))
+                continue
+            if opcode in _CALL_OPS:
+                # fusions' inner computations are elementwise; don't recurse
+                # for flops (counted via result elems) but do for nested
+                # control flow in call/conditional.
+                if opcode in ("call", "conditional"):
+                    for cm in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", ln):
+                        ed.append((cm.group(1), None))
+                    for cm in re.finditer(r"branch_computations=\{([^}]*)\}", ln):
+                        for b in cm.group(1).split(","):
+                            ed.append((b.strip().lstrip("%"), None))
+
+            # flops
+            if opcode == "dot":
+                out_e = _elems(ty)
+                contract = 1
+                lm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ln)
+                if lm and opnds:
+                    lhs_dims = _shape_dims(ty_of.get(opnds[0], ""))
+                    if lhs_dims:
+                        dims = lhs_dims[0][1]
+                        for i in lm.group(1).split(","):
+                            if i and int(i) < len(dims):
+                                contract *= dims[int(i)]
+                fl += 2.0 * out_e * contract
+            elif opcode not in _SKIP_MEM:
+                fl += _elems(ty)  # elementwise estimate: 1 flop / output elem
+
+            # memory traffic: operands + result for real ops
+            if opcode not in _SKIP_MEM:
+                rb = _shape_bytes(ty)
+                obs = [_shape_bytes(ty_of.get(o, "")) for o in opnds]
+                is_dus = opcode == "dynamic-update-slice"
+                if opcode == "fusion":
+                    cm2 = re.search(r"calls=%?([\w.\-]+)", ln)
+                    if cm2 and fused_root.get(cm2.group(1)) == "dynamic-update-slice":
+                        is_dus = True
+                if is_dus and any(b == rb for b in obs):
+                    # in-place update: read+write the small operands only
+                    mb += 2.0 * (sum(obs) - rb)
+                else:
+                    mb += rb + sum(obs)
+        flops_c[cname] = fl
+        mem_c[cname] = mb
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(c) for ln in comps.get(cond_name, []) for c in _CONST.findall(ln)]
+        return max(consts) if consts else 1
+
+    per_kind = {k: {"bytes": 0.0, "count": 0.0} for k in _COLLECTIVES}
+    total = {"flops": 0.0, "mem": 0.0}
+    stack: List[str] = []
+
+    def walk(cname: str, mult: float):
+        if cname not in comps or cname in stack or len(stack) > 200:
+            return
+        stack.append(cname)
+        for kind, b in colls.get(cname, []):
+            per_kind[kind]["bytes"] += b * mult
+            per_kind[kind]["count"] += mult
+        total["flops"] += flops_c.get(cname, 0.0) * mult
+        total["mem"] += mem_c.get(cname, 0.0) * mult
+        for body, cond in edges.get(cname, []):
+            walk(body, mult * (trip_count(cond) if cond else 1))
+        stack.pop()
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is not None:
+        walk(entry, 1.0)
+    else:
+        for cname in comps:  # pragma: no cover - fallback
+            walk(cname, 1.0)
+    per_kind = {k: v for k, v in per_kind.items() if v["count"]}
+    return {
+        "per_kind": per_kind,
+        "collective_bytes": sum(v["bytes"] for v in per_kind.values()),
+        "flops": total["flops"],
+        "mem_bytes": total["mem"],
+    }
+
+
+def analyze_collectives(hlo: str) -> Tuple[Dict[str, Dict[str, float]], float]:
+    """Back-compat wrapper: (per-kind collectives, total bytes)."""
+    res = analyze(hlo)
+    return res["per_kind"], res["collective_bytes"]

@@ -1,0 +1,26 @@
+"""Production meshes.  A FUNCTION, not a module constant: importing this
+module must never touch jax device state (the dry-run sets the fake device
+count before first jax init; everything else sees the single real CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 ("data","model") = 256 chips.
+    Multi-pod: 2x16x16 ("pod","data","model") = 512 chips (2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")):
+    """Tiny mesh over forced host devices — used by reduced-scale dry-run
+    tests (8 fake devices) so CI exercises the same code path."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )

@@ -1,0 +1,127 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+`input_specs(cfg, shape, mesh)` produces weak-type-correct, shardable SDS
+trees for the step functions — no device allocation ever happens in the
+dry-run; `.lower()` consumes these directly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import init_caches, init_params
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.sharding import param_shardings, spec_for
+
+
+def _sds(shape, dtype, mesh=None, axes=None):
+    sh = None
+    if mesh is not None:
+        sh = NamedSharding(mesh, spec_for(shape, axes or (None,) * len(shape), mesh))
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None) -> Dict[str, Any]:
+    """SDS dict for one global batch of (cfg, shape)."""
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else shape.seq_len  # ctx len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "decode":
+        return {"tokens": _sds((B, 1), jnp.int32, mesh, ("dp", None))}
+    out = {"tokens": _sds((B, S), jnp.int32, mesh, ("dp", None))}
+    if cfg.family == "vlm":
+        out["patches"] = _sds((B, cfg.n_patches, cfg.d_model), dt, mesh, ("dp", None, None))
+    if cfg.family == "encdec":
+        out["frames"] = _sds((B, cfg.enc_seq_len, cfg.d_model), dt, mesh, ("dp", None, None))
+    return out
+
+
+def params_specs(cfg: ModelConfig, mesh=None, fsdp=False):
+    """(SDS tree, shardings tree) for the model parameters."""
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    if mesh is None:
+        return shapes, None
+    sh = param_shardings(shapes, mesh, fsdp=fsdp)
+    sds = jax.tree_util.tree_map(
+        lambda s, h: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=h), shapes, sh
+    )
+    return sds, sh
+
+
+def _cache_axes(leaf_ndim: int, kind: str) -> Tuple:
+    if kind == "kv":  # [L, B, S, ...] — seq split-K over model
+        return (None, "dp", "sp") + (None,) * (leaf_ndim - 3)
+    return (None, "dp") + (None,) * (leaf_ndim - 2)  # ssm: [L, B, ...]
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None):
+    """SDS tree (+shardings) for decode caches at this shape's context."""
+    B, S = shape.global_batch, shape.seq_len
+    shapes = jax.eval_shape(lambda: init_caches(cfg, B, S))
+    if mesh is None:
+        return shapes, None
+
+    def one_field(tree, kind):
+        if tree == ():
+            return (), ()
+        sh = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, spec_for(s.shape, _cache_axes(s.ndim, kind), mesh)),
+            tree,
+        )
+        sds = jax.tree_util.tree_map(
+            lambda s, h: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=h), tree, sh
+        )
+        return sds, sh
+
+    kv_sds, kv_sh = one_field(shapes.kv, "kv")
+    ssm_sds, ssm_sh = one_field(shapes.ssm, "ssm")
+    sh_sds, sh_sh = one_field(shapes.shared_kv, "kv")
+    cr_sds, cr_sh = one_field(shapes.cross_kv, "kv")
+    make = type(shapes)
+    return make(kv_sds, ssm_sds, sh_sds, cr_sds), make(kv_sh, ssm_sh, sh_sh, cr_sh)
+
+
+def opt_state_shardings(opt_shapes, p_shard, mesh):
+    """Optimizer-state shardings derived from the parameter shardings:
+    m/v mirror params; factored-v tuples drop the corresponding dim."""
+    if p_shard is None:
+        return None
+    rep = NamedSharding(mesh, P())
+
+    def v_like(ps, leaf):
+        spec = tuple(ps.spec)
+        if isinstance(leaf, tuple):  # factored (row, col)
+            spec = spec + (None,) * (len(leaf[0].shape) + 1 - len(spec))
+            row = NamedSharding(mesh, P(*spec[:-1][: len(leaf[0].shape)]))
+            col_spec = tuple(spec[:-2]) + (spec[-1],)
+            col = NamedSharding(mesh, P(*col_spec[: len(leaf[1].shape)]))
+            return (row, col)
+        spec = spec + (None,) * (len(leaf.shape) - len(spec))
+        return NamedSharding(mesh, P(*spec[: len(leaf.shape)]))
+
+    is_pair = lambda x: isinstance(x, tuple) and not hasattr(x, "shape")
+    m_sh = jax.tree_util.tree_map(lambda ps, l: v_like(ps, l), p_shard, opt_shapes.m)
+    v_sh = jax.tree_util.tree_map(
+        lambda ps, l: v_like(ps, l), p_shard, opt_shapes.v, is_leaf=lambda x: is_pair(x)
+    )
+    # tree_map with is_leaf on the SECOND tree needs care; rebuild manually
+    flat_p, tdef = jax.tree_util.tree_flatten(p_shard)
+    flat_v = tdef.flatten_up_to(opt_shapes.v)
+    v_sh = tdef.unflatten([v_like(ps, lv) for ps, lv in zip(flat_p, flat_v)])
+    return type(opt_shapes)(step=rep, m=m_sh, v=v_sh)
+
+
+def attach(sds_tree, sh_tree):
+    """Attach shardings to an SDS tree (leaf-wise, tolerating tuples)."""
+    flat_s, tdef = jax.tree_util.tree_flatten(sds_tree)
+    flat_h = jax.tree_util.tree_leaves(sh_tree)
+    assert len(flat_s) == len(flat_h), (len(flat_s), len(flat_h))
+    out = [
+        jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=h)
+        for s, h in zip(flat_s, flat_h)
+    ]
+    return tdef.unflatten(out)

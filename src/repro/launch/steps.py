@@ -1,0 +1,113 @@
+"""Jitted step builders: train_step / prefill_step / decode_step.
+
+`train_policy(cfg)` centralizes the scale-dependent choices (ZeRO/fsdp
+axes, optimizer flavor) so dryrun/train/serve agree:
+
+* < 8B params      — AdamW fp32 states, no fsdp (TP+DP only).
+* 8B – 500B        — AdamW fp32 states, params+opt ZeRO-sharded over "data".
+* > 500B (kimi-1t) — bf16-momentum + factored-v optimizer, ZeRO over
+                     ("data","pod"): AdamW fp32 states for 1T params are
+                     8 TB > 2 pods of HBM (see EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step as model_decode
+from repro.models import loss_fn as model_loss
+from repro.models import prefill as model_prefill
+from repro.optim import make_adafactor_momentum, make_adamw, wsd_schedule, cosine_schedule
+from repro.sched import ws_accumulate_grads
+
+
+def train_policy(cfg) -> Dict[str, Any]:
+    n = cfg.param_count()
+    if n > 500e9:
+        return {"fsdp": "pods", "optimizer": "adafactor_momentum"}
+    if n > 8e9:
+        return {"fsdp": True, "optimizer": "adamw"}
+    return {"fsdp": False, "optimizer": "adamw"}
+
+
+def make_optimizer(cfg, total_steps: int = 10_000, peak_lr: float = 3e-4):
+    pol = train_policy(cfg)
+    if cfg.depth_scaled_residual:  # minicpm trains with WSD
+        lr = wsd_schedule(peak_lr, warmup=total_steps // 100 + 1,
+                          stable=int(total_steps * 0.8), decay=total_steps // 5 + 1)
+    else:
+        lr = cosine_schedule(peak_lr, warmup=total_steps // 100 + 1, total=total_steps)
+    if pol["optimizer"] == "adafactor_momentum":
+        return make_adafactor_momentum(lr)
+    return make_adamw(lr)
+
+
+def make_train_step(
+    cfg,
+    opt,
+    *,
+    ws_mode: Optional[str] = None,
+    n_workers: int = 0,
+    sync_every: int = 1,
+    max_rounds: Optional[int] = None,
+    remat: bool = True,
+    chunk: int = 1024,
+) -> Callable:
+    """state = {"params", "opt"}; batch per models.model docstring.
+
+    ws_mode=None: one full-batch loss (baseline).
+    ws_mode in repro.sched.MODES: the batch's leading dim is a FIFO of
+    microbatch tasks scheduled by the paper's work-stealing rounds;
+    batch["tails"] gives per-worker-queue task counts.
+    """
+
+    def step(state, batch):
+        params = state["params"]
+        if ws_mode is None:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: model_loss(p, cfg, batch, remat=remat, chunk=chunk),
+                has_aux=True,
+            )(params)
+            aux = {}
+        else:
+            tails = batch["tails"]
+            micro = {k: v for k, v in batch.items() if k != "tails"}
+
+            def flat_loss(p, flat, row_w):
+                # flat leaves [n_workers*rows, ...] stay dp-sharded (no
+                # vmap: GSPMD keeps the batch dim partitioned)
+                return model_loss(
+                    p, cfg, flat, remat=remat, chunk=chunk, row_weights=row_w
+                )[0]
+
+            loss, grads, aux = ws_accumulate_grads(
+                flat_loss, params, micro, tails,
+                n_workers=n_workers, mode=ws_mode, sync_every=sync_every,
+                max_rounds=max_rounds, flat_loss=True,
+            )
+            metrics = {"ce": loss}
+        new_params, new_opt = opt.apply(params, grads, state["opt"])
+        out_metrics = {"loss": loss, **{k: v for k, v in metrics.items()}}
+        if aux:
+            out_metrics["ws_coverage"] = aux["coverage"]
+            out_metrics["ws_extractions"] = aux["extractions"]
+        return {"params": new_params, "opt": new_opt}, out_metrics
+
+    return step
+
+
+def make_prefill_step(cfg, chunk: int = 1024) -> Callable:
+    def step(params, batch):
+        return model_prefill(params, cfg, batch, chunk=chunk)
+
+    return step
+
+
+def make_decode_step(cfg) -> Callable:
+    def step(params, caches, tokens, pos):
+        return model_decode(params, cfg, caches, tokens, pos)
+
+    return step

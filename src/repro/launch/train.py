@@ -1,0 +1,168 @@
+"""End-to-end training driver (CPU-runnable at smoke scale, mesh-ready).
+
+Features exercised here and by examples/tests:
+  * real data pipeline (synthetic corpus, packed documents),
+  * the paper's L1 scheduler as the gradient-accumulation engine
+    (--ws-mode static|ws-mult|ws-mult-ranked|ws-wmult|ws-wmult-deque),
+  * checkpoint / resume (atomic, async) and a preemption drill
+    (--preempt-at N exits mid-run; rerun with --resume continues),
+  * WSD/cosine schedules via launch.steps.make_optimizer.
+
+Usage: python -m repro.launch.train --arch llama3.2-3b --steps 60 ...
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.configs import ARCH_IDS, get_config
+from repro.data import make_batch
+from repro.launch.steps import make_optimizer, make_train_step
+from repro.models import init_params
+from repro.models.config import ShapeConfig
+
+
+def _skewed_tails(n_tasks: int, n_workers: int, step: int, skew: float) -> np.ndarray:
+    """Deterministic per-step queue skew (the straggler/imbalance model)."""
+    rng = np.random.RandomState(step * 7919 + 13)
+    w = rng.dirichlet(np.full(n_workers, max(1e-3, 1.0 / max(skew, 1e-3))))
+    tails = np.floor(w * n_tasks).astype(np.int64)
+    while tails.sum() < n_tasks:
+        tails[rng.randint(n_workers)] += 1
+    return tails
+
+
+def train(
+    arch: str,
+    *,
+    smoke: bool = True,
+    steps: int = 100,
+    rows: int = 8,
+    seq: int = 64,
+    ws_mode: str | None = None,
+    n_workers: int = 4,
+    tasks_per_worker: int = 2,
+    skew: float = 1.0,
+    lr: float = 3e-3,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 20,
+    resume: bool = False,
+    preempt_at: int | None = None,
+    seed: int = 0,
+    log_every: int = 10,
+    log_path: str | None = None,
+):
+    cfg = get_config(arch, smoke=smoke)
+    shape = ShapeConfig("custom", "train", seq, rows)
+    opt = make_optimizer(cfg, total_steps=steps, peak_lr=lr)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    state = {"params": params, "opt": opt.init(params)}
+    start = 0
+    if resume and ckpt_dir and latest_step(ckpt_dir) is not None:
+        like = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state
+        )
+        state, start = restore(ckpt_dir, like)
+        start += 1
+        print(f"[train] resumed from step {start - 1}")
+
+    n_tasks = n_workers * tasks_per_worker
+    step_fn = jax.jit(
+        make_train_step(cfg, opt, ws_mode=ws_mode, n_workers=n_workers)
+    )
+    ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+    losses = []
+    t0 = time.time()
+    for step in range(start, steps):
+        if ws_mode is None:
+            batch = {
+                k: jnp.asarray(v)
+                for k, v in make_batch(cfg, shape, step, n_rows=rows, seed=seed).items()
+            }
+        else:
+            nb = make_batch(cfg, shape, step, n_rows=n_tasks * max(rows // n_tasks, 1), seed=seed)
+            rpt = max(rows // n_tasks, 1)
+            batch = {
+                k: jnp.asarray(v).reshape((n_tasks, rpt) + v.shape[1:])
+                for k, v in nb.items()
+            }
+            batch["tails"] = jnp.asarray(_skewed_tails(n_tasks, n_workers, step, skew))
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % log_every == 0 or step == steps - 1:
+            msg = {"step": step, "loss": round(loss, 4), "t": round(time.time() - t0, 1)}
+            if "ws_coverage" in metrics:
+                msg["ws_coverage"] = float(metrics["ws_coverage"])
+            print(f"[train] {json.dumps(msg)}")
+            if log_path:
+                with open(log_path, "a") as f:
+                    f.write(json.dumps(msg) + "\n")
+        if ckpt and (step % ckpt_every == 0 or step == steps - 1):
+            ckpt.save(step, state)
+        if preempt_at is not None and step == preempt_at:
+            print(f"[train] simulating preemption at step {step}", flush=True)
+            if ckpt:
+                ckpt.wait()
+            os._exit(17)  # hard kill, as a real preemption would be
+    if ckpt:
+        ckpt.wait()
+    return state, losses
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b", choices=list(ARCH_IDS))
+    ap.add_argument("--full-config", action="store_true", help="full (non-smoke) config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--rows", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ws-mode", default=None)
+    ap.add_argument("--n-workers", type=int, default=4)
+    ap.add_argument("--skew", type=float, default=1.0)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--preempt-at", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-path", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+    _, losses = train(
+        args.arch,
+        smoke=not args.full_config,
+        steps=args.steps,
+        rows=args.rows,
+        seq=args.seq,
+        ws_mode=args.ws_mode,
+        n_workers=args.n_workers,
+        skew=args.skew,
+        lr=args.lr,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        resume=args.resume,
+        preempt_at=args.preempt_at,
+        seed=args.seed,
+        log_path=args.log_path,
+        log_every=args.log_every,
+    )
+    k = max(len(losses) // 10, 1)
+    print(
+        f"[train] done: first-{k} mean loss {np.mean(losses[:k]):.4f} -> "
+        f"last-{k} mean loss {np.mean(losses[-k:]):.4f}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,120 @@
+"""Shared building blocks for every architecture family.
+
+Pure-functional JAX: parameters are nested dicts of jnp arrays; repeated
+layers are *stacked* along a leading axis and executed with ``lax.scan`` so
+the HLO stays small enough to compile 60-layer models against a 512-device
+mesh.  Everything here is shape-polymorphic over a batch of tokens
+``[B, S, d]`` and takes dtypes from the config.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def uniform_init(key, shape, scale, dtype):
+    """Scaled uniform init (LeCun-ish); cheap and deterministic."""
+    return jax.random.uniform(key, shape, jnp.float32, -scale, scale).astype(dtype)
+
+
+def dense_init(key, d_in, shape, dtype):
+    return uniform_init(key, shape, (3.0 / max(d_in, 1)) ** 0.5, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+
+
+def rms_norm(x, weight, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def swiglu(x, wg, wu, wd, pet=None):
+    """SwiGLU MLP: (silu(x@wg) * (x@wu)) @ wd.  `pet` sets the down-proj
+    accumulation dtype (bf16 -> the TP all-reduce moves bf16)."""
+    g = jnp.einsum("bsd,df->bsf", x, wg)
+    u = jnp.einsum("bsd,df->bsf", x, wu)
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, wd, preferred_element_type=pet)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [B, S, H, hd]; positions: [B, S] (int32). Pairs (even, odd) rotated."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, hd/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# cross-entropy (vocab-sharded friendly)
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean next-token CE. logits [.., V] f32-upcast; labels [..] int32.
+
+    Stays einsum-friendly for GSPMD when V is sharded: max/logsumexp reduce
+    over the sharded axis lowers to a psum.
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def chunked_softmax_xent(hidden, w_unembed, labels, mask=None, chunk: int = 1024):
+    """CE without materializing the full [B,S,V] logits: scan over S-chunks.
+
+    The beyond-paper memory optimization for big-vocab archs (gemma3 262k):
+    peak activation drops from O(S·V) to O(chunk·V).
+    """
+    B, S, _ = hidden.shape
+    n = S // chunk
+    assert n * chunk == S, (S, chunk)
+    hid = hidden.reshape(B, n, chunk, -1).swapaxes(0, 1)  # [n, B, c, d]
+    lab = labels.reshape(B, n, chunk).swapaxes(0, 1)
+    msk = (
+        mask.reshape(B, n, chunk).swapaxes(0, 1).astype(jnp.float32)
+        if mask is not None
+        else jnp.ones((n, B, chunk), jnp.float32)
+    )
+
+    def body(acc, xs):
+        h, l, mk = xs
+        logits = jnp.einsum("bcd,dv->bcv", h, w_unembed).astype(jnp.float32)
+        mx = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(logits - mx), axis=-1)) + mx[..., 0]
+        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        s, c = acc
+        return (s + ((lse - gold) * mk).sum(), c + mk.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (hid, lab, msk))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,261 @@
+"""Unified model configuration covering all assigned architecture families.
+
+One frozen dataclass drives the generic stack in transformer.py: dense GQA
+(llama3.2), GQA+SWA (h2o-danube), depth-scaled dense (minicpm), 5:1
+local:global (gemma3), MLA+MoE (deepseek-v2), large MoE (kimi-k2), VLM
+backbone (pixtral), encoder-decoder audio backbone (whisper), SSD state-space
+(mamba2) and hybrid mamba+shared-attention (zamba2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: Optional[int] = None  # default d_model // n_heads
+
+    # -- attention variants -------------------------------------------------
+    attn_kind: str = "gqa"  # gqa | mla
+    window: int = 0  # sliding-window size; 0 = full attention
+    # per-layer window pattern: e.g. gemma3 = 5 local then 1 global per group.
+    # locals_per_global == 0 -> uniform (window applies to all layers if set)
+    locals_per_global: int = 0
+
+    # -- MLA (deepseek-v2) ---------------------------------------------------
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    rope_head_dim: int = 64
+    v_head_dim: int = 0  # defaults to head_dim
+
+    # -- MoE -----------------------------------------------------------------
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0  # per-expert hidden (deepseek/kimi "d_ff" column)
+    first_k_dense: int = 0  # leading dense layers (deepseek-v2: 1)
+    capacity_factor: float = 1.25
+
+    # -- SSM (mamba2 / zamba2) -------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 128
+    ssm_conv_width: int = 4
+
+    # -- hybrid (zamba2): shared attention block applied every k ssm layers ---
+    hybrid_attn_every: int = 0
+
+    # -- encoder-decoder (whisper) --------------------------------------------
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+    enc_seq_len: int = 1500  # whisper 30s @ 50Hz after conv stub
+
+    # -- modality frontend stub ----------------------------------------------
+    # 'none' | 'patch' (vlm: precomputed patch embeddings prepended)
+    #        | 'frames' (audio: precomputed frame embeddings into the encoder)
+    frontend: str = "none"
+    n_patches: int = 0  # vlm: patches per image prepended to the text sequence
+
+    # -- misc -----------------------------------------------------------------
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    depth_scaled_residual: bool = False  # minicpm
+    dtype: str = "float32"  # compute/param dtype: float32 for smoke, bfloat16 for dry-run
+
+    # -- beyond-paper perf knobs (see EXPERIMENTS.md §Perf) --------------------
+    # Zero-pad attention heads so the head dim divides the 16-way model axis
+    # (exactly training-equivalent: padded slices init to zero and receive
+    # zero gradients).  Llama 24H -> 32 (group-major, G 3->4); MHA archs pad
+    # q and kv together (minicpm 36 -> 48, whisper 8 -> 16).
+    pad_heads: bool = False
+    # Accumulate TP partial sums in bf16 so the implicit all-reduce moves
+    # bf16 instead of f32 (Megatron-style bf16 tensor-parallel comm; XLA
+    # otherwise reduces the f32 dot accumulators).  Applied to the einsums
+    # whose contraction is model-sharded: attention o-proj, MLP down-proj,
+    # MoE combine.
+    bf16_reduce: bool = False
+
+    # ------------------------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 (TP divisibility + MXU lanes).
+
+        Embedding/unembedding tables are allocated at this size; the pad
+        columns are masked to -inf in the loss and decode logits.
+        """
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def eff_heads(self) -> Tuple[int, int]:
+        """(n_heads, n_kv_heads) actually allocated (>= config when
+        pad_heads; padded slices are zero)."""
+        H, Hkv = self.n_heads, self.n_kv_heads
+        if not self.pad_heads:
+            return H, Hkv
+        pad16 = lambda x: -(-x // 16) * 16
+        if H == Hkv:  # MHA: pad both together (grouping stays 1:1)
+            return pad16(H), pad16(Hkv)
+        if H % 16 == 0:
+            return H, Hkv  # q already divides; kv stays replicated
+        # GQA: grow the group size until Hkv * G divides 16 (group-major
+        # layout keeps each q head attached to its original kv head)
+        G = H // Hkv
+        while (Hkv * G) % 16:
+            G += 1
+        return Hkv * G, Hkv
+
+    @property
+    def v_hd(self) -> int:
+        return self.v_head_dim if self.v_head_dim else self.hd
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def is_ssm(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def layer_windows(self) -> Tuple[int, ...]:
+        """Per-layer window (0 = full attention) for attention archs."""
+        n = self.n_layers
+        if self.locals_per_global > 0:
+            k = self.locals_per_global
+            return tuple(
+                self.window if (i % (k + 1)) < k else 0 for i in range(n)
+            )
+        return tuple(self.window for _ in range(n))
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if decode cost does not scale with full context (long_500k ok)."""
+        if self.family in ("ssm",):
+            return True
+        if self.family == "hybrid":
+            return True  # mamba state + windowed/shared attention
+        ws = self.layer_windows
+        return all(w > 0 for w in ws) if ws else False
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- parameter count (for 6ND model flops) --------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding included once)."""
+        d, V = self.d_model, self.vocab_size
+        total = V * d  # embed
+        if not self.tie_embeddings:
+            total += V * d  # lm head
+
+        def attn_params() -> int:
+            if self.attn_kind == "mla":
+                hd_n = self.hd
+                p = 0
+                if self.q_lora_rank:
+                    p += d * self.q_lora_rank
+                    p += self.q_lora_rank * self.n_heads * (hd_n + self.rope_head_dim)
+                else:
+                    p += d * self.n_heads * (hd_n + self.rope_head_dim)
+                p += d * (self.kv_lora_rank + self.rope_head_dim)
+                p += self.kv_lora_rank * self.n_heads * (hd_n + self.v_hd)
+                p += self.n_heads * self.v_hd * d
+                return p
+            q = d * self.n_heads * self.hd
+            kv = 2 * d * self.n_kv_heads * self.hd
+            o = self.n_heads * self.hd * d
+            return q + kv + o
+
+        def dense_ffn(dff) -> int:
+            return 3 * d * dff  # SwiGLU
+
+        def moe_ffn() -> int:
+            p = d * self.n_experts  # router
+            p += self.n_experts * dense_ffn(self.moe_d_ff) // 1
+            p += self.n_shared_experts * dense_ffn(self.moe_d_ff)
+            return p
+
+        def ssm_block() -> int:
+            di, ds, H = self.d_inner, self.ssm_state, self.ssm_heads
+            p = d * (2 * di + 2 * ds + H)  # in_proj -> x, z, B, C, dt
+            p += di * self.ssm_conv_width  # conv
+            p += H + H + di  # A, D, dt_bias-ish
+            p += di * d  # out_proj
+            return p
+
+        if self.family == "encdec":
+            enc = self.n_enc_layers * (attn_params() + dense_ffn(self.d_ff))
+            dec = self.n_dec_layers * (2 * attn_params() + dense_ffn(self.d_ff))
+            return total + enc + dec
+        if self.family == "ssm":
+            return total + self.n_layers * ssm_block()
+        if self.family == "hybrid":
+            # mamba layers have no per-layer MLP; two alternating SHARED
+            # attention+MLP blocks are counted once each (zamba2).
+            shared = 2 * (attn_params() + dense_ffn(self.d_ff))
+            return total + self.n_layers * ssm_block() + shared
+        per_layer_attn = attn_params()
+        if self.is_moe:
+            dense_layers = self.first_k_dense
+            moe_layers = self.n_layers - dense_layers
+            return (
+                total
+                + self.n_layers * per_layer_attn
+                + dense_layers * dense_ffn(self.d_ff if self.d_ff else self.moe_d_ff * 4)
+                + moe_layers * moe_ffn()
+            )
+        return total + self.n_layers * (per_layer_attn + dense_ffn(self.d_ff))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if not self.is_moe:
+            return self.param_count()
+        full = self.param_count()
+        d = self.d_model
+        inactive_experts = self.n_experts - self.top_k
+        moe_layers = self.n_layers - self.first_k_dense
+        return full - moe_layers * inactive_experts * 3 * d * self.moe_d_ff
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One of the assigned input-shape cells."""
+
+    name: str  # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}

@@ -1,0 +1,172 @@
+"""Sharding rules: logical axes -> mesh axes, with divisibility fallback.
+
+Logical axes used by the model code:
+
+* ``dp``   — batch / token dim: all data-parallel mesh axes (("pod","data")).
+* ``tp``   — tensor-parallel dim (heads / ffn inner / vocab / experts): "model".
+* ``fsdp`` — ZeRO-style parameter sharding dim: "data" (params are re-gathered
+             per scanned layer by GSPMD; the optimizer state inherits the
+             sharding, giving ZeRO-1/3 for free).  Enabled per-config
+             (`fsdp=True` for the multi-hundred-B archs).
+* ``sp``   — sequence dim of decode KV caches: "model" (flash-decoding
+             split-K).
+
+``shard(x, *axes)`` applies a with_sharding_constraint if a mesh is active
+and the corresponding dim is divisible by the mesh axes' size; otherwise
+that dim is left unsharded (e.g. llama's 24 heads on a 16-way model axis
+fall back to replicated attention — recorded as a baseline inefficiency in
+EXPERIMENTS.md and addressed in the perf pass).
+
+No mesh active (unit tests, CPU smoke) -> everything is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = {"mesh": None, "fsdp": False}
+
+LOGICAL = {
+    "dp": ("pod", "data"),
+    "tp": ("model",),
+    "fsdp": ("data",),
+    "fsdp+": ("data", "pod"),  # ZeRO across pods too (1T-class archs)
+    "sp": ("model",),
+}
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], fsdp: bool = False):
+    prev = dict(_STATE)
+    _STATE["mesh"] = mesh
+    _STATE["fsdp"] = fsdp
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _STATE.update(prev)
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _STATE["mesh"]
+
+
+def fsdp_enabled() -> bool:
+    return _STATE["fsdp"] and _STATE["mesh"] is not None
+
+
+def _resolve(axis: Optional[str], dim: int, mesh: Mesh):
+    """Logical axis -> tuple of mesh axes that evenly divide dim (or None)."""
+    if axis is None:
+        return None
+    names = LOGICAL.get(axis, (axis,))
+    present = tuple(n for n in names if n in mesh.axis_names)
+    if not present:
+        return None
+    size = math.prod(mesh.shape[n] for n in present)
+    if dim % size != 0:
+        # try a prefix (e.g. dp=("pod","data") but only "pod" divides)
+        for k in range(len(present) - 1, 0, -1):
+            size = math.prod(mesh.shape[n] for n in present[:k])
+            if dim % size == 0:
+                return present[:k]
+        return None
+    return present if len(present) > 1 else present[0]
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]], mesh: Mesh) -> P:
+    assert len(shape) == len(axes), (shape, axes)
+    return P(*(_resolve(a, d, mesh) for d, a in zip(shape, axes)))
+
+
+def shard(x, *axes: Optional[str]):
+    """Constrain x's sharding by logical axes (one per dim; None = any)."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter specs (by tree-path name)
+
+_PARAM_RULES = (
+    # (name, logical axes per dim) — <fsdp> resolves to fsdp axis iff enabled.
+    ("embed", ("tp", "<fsdp>")),  # [V, d]
+    ("unembed", ("<fsdp>", "tp")),  # [d, V]
+    ("pos_embed", (None, "<fsdp>")),
+    ("wq", ("<fsdp>", "tp", None)),
+    ("wk", ("<fsdp>", "tp", None)),
+    ("wv", ("<fsdp>", "tp", None)),
+    ("wo", ("tp", None, "<fsdp>")),
+    ("wdq", ("<fsdp>", None)),
+    ("wuq", (None, "tp", None)),
+    ("wdkv", ("<fsdp>", None)),
+    ("wkr", ("<fsdp>", None)),
+    ("wuk", (None, "tp", None)),
+    ("wuv", (None, "tp", None)),
+    ("wg", ("<fsdp>", "tp")),
+    ("wu", ("<fsdp>", "tp")),
+    ("wd", ("tp", "<fsdp>")),
+    ("router", ("<fsdp>", None)),
+    ("we_g", ("tp", "<fsdp>", None)),  # experts = EP over model
+    ("we_u", ("tp", "<fsdp>", None)),
+    ("we_d", ("tp", None, "<fsdp>")),
+    ("ws_g", ("<fsdp>", "tp")),
+    ("ws_u", ("<fsdp>", "tp")),
+    ("ws_d", ("tp", "<fsdp>")),
+    ("w_z", ("<fsdp>", "tp")),
+    ("w_x", ("<fsdp>", "tp")),
+    ("w_B", ("<fsdp>", None)),
+    ("w_C", ("<fsdp>", None)),
+    ("w_dt", ("<fsdp>", None)),
+    ("conv_x", (None, "tp")),
+    ("w_out", ("tp", "<fsdp>")),
+)
+_RULES = dict(_PARAM_RULES)
+
+
+def param_spec(path_name: str, shape: Sequence[int], mesh: Mesh, fsdp: bool, stacked: bool) -> P:
+    """Spec for one parameter; `stacked` => leading layer dim (unsharded)."""
+    axes = _RULES.get(path_name)
+    if axes is None:
+        return P()  # norms, biases, small vectors: replicated
+    fa = ("fsdp+" if fsdp == "pods" else "fsdp") if fsdp else None
+    axes = tuple(fa if a == "<fsdp>" else a for a in axes)
+    if stacked:
+        axes = (None,) + tuple(axes)
+    if len(axes) != len(shape):  # e.g. unstacked variant of a rule
+        axes = axes[-len(shape):] if len(axes) > len(shape) else axes + (None,) * (len(shape) - len(axes))
+    return spec_for(shape, axes, mesh)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+def param_shardings(params, mesh: Mesh, fsdp=False, stacked_prefixes=("layers",)):
+    """NamedSharding pytree for a params pytree (shapes or arrays)."""
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        stacked = any(
+            getattr(e, "key", None) in stacked_prefixes for e in path if hasattr(e, "key")
+        )
+        return NamedSharding(mesh, param_spec(name, shape, mesh, fsdp, stacked))
+
+    return jax.tree_util.tree_map_with_path(one, params)

@@ -1,0 +1,204 @@
+"""Mamba-2 SSD (state-space duality) block — chunked train/prefill + O(1) decode.
+
+The chunked algorithm (Dao & Gu 2024): within a chunk the recurrence is
+computed as a masked quadratic form (MXU-friendly); across chunks a small
+recurrent state [H, P, N] is carried by a scan.  This file is the pure-jnp
+path (also the oracle for kernels/ssd_scan); heads are sharded over the
+`model` mesh axis (H = d_inner/headdim is a multiple of 16 for both SSM
+archs).
+
+Projections are kept separate (w_z/w_x/w_B/w_C/w_dt) rather than one packed
+in_proj: a depthwise conv over concat(x,B,C) factors exactly into three
+depthwise convs, and separate tensors shard cleanly.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+
+def init_mamba(key, cfg, dtype):
+    d, di, N, H, W = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv_width
+    ks = jax.random.split(key, 9)
+    return {
+        "w_z": dense_init(ks[0], d, (d, di), dtype),
+        "w_x": dense_init(ks[1], d, (d, di), dtype),
+        "w_B": dense_init(ks[2], d, (d, N), dtype),
+        "w_C": dense_init(ks[3], d, (d, N), dtype),
+        "w_dt": dense_init(ks[4], d, (d, H), dtype),
+        "conv_x": dense_init(ks[5], W, (W, di), dtype),
+        "conv_B": dense_init(ks[6], W, (W, N), dtype),
+        "conv_C": dense_init(ks[7], W, (W, N), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+        "w_out": dense_init(ks[8], di, (di, d), dtype),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv. x: [B, S, C]; w: [W, C]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):  # W=4: unrolled adds, no conv primitive needed
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return jax.nn.silu(out)
+
+
+def _segsum(dA):
+    """dA: [..., q] -> [..., q, q] lower-triangular segment sums."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]  # ss[i,j] = sum(j+1..i)
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
+    """SSD scan. x: [B,S,H,P]; dt: [B,S,H]; A: [H]; B,C: [B,S,N] (1 group).
+
+    Returns (y: [B,S,H,P], final_state: [B,H,P,N]).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    c = S // Q
+    assert c * Q == S, (S, Q)
+    xr = x.reshape(b, c, Q, H, P)
+    dtr = dt.reshape(b, c, Q, H)
+    Br = B.reshape(b, c, Q, N)
+    Cr = C.reshape(b, c, Q, N)
+
+    xdt = xr * dtr[..., None]  # discretized input
+    dA = dtr * A  # [b,c,Q,H]
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # [b,c,H,Q,Q]
+    scores = jnp.einsum("bcin,bcjn->bcij", Cr, Br)
+    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp", scores, L, xdt)
+
+    # per-chunk end states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # [b,c,Q,H]
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Br, decay_states, xdt)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # [b,c,H]
+
+    def step(s, inp):
+        st_c, dec_c = inp
+        out = s
+        s = s * dec_c[:, :, None, None] + st_c
+        return s, out
+
+    s0 = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((b, H, P, N), jnp.float32)
+    )
+    final, prev = jax.lax.scan(
+        step,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev = prev.transpose(1, 0, 2, 3, 4).astype(x.dtype)  # state entering chunk c
+
+    # state -> output within each chunk
+    state_decay = jnp.exp(dA_cs)  # [b,c,Q,H]
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cr, prev, state_decay)
+    y = (y_diag + y_off).reshape(b, S, H, P).astype(x.dtype)
+    return y, final
+
+
+def _gated_norm(y, z, weight, eps=1e-6):
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (y.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(y.dtype) * (
+        1.0 + weight.astype(y.dtype)
+    )
+
+
+def mamba_train(x, p, cfg, *, return_cache: bool = False):
+    """x: [B, S, d] -> [B, S, d] (optionally also the decode-resume cache)."""
+    b, S, d = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"])
+    raw_x = jnp.einsum("bsd,de->bse", x, p["w_x"])
+    raw_B = jnp.einsum("bsd,dn->bsn", x, p["w_B"])
+    raw_C = jnp.einsum("bsd,dn->bsn", x, p["w_C"])
+    xi = _causal_conv(raw_x, p["conv_x"])
+    B_ = _causal_conv(raw_B, p["conv_B"])
+    C_ = _causal_conv(raw_C, p["conv_C"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"]).astype(jnp.float32) + p["dt_bias"]
+    )
+    A = -jnp.exp(p["A_log"])
+    y, final = ssd_chunked(xi.reshape(b, S, H, P), dt, A, B_, C_, cfg.ssm_chunk)
+    y = y + xi.reshape(b, S, H, P) * p["D"][None, None, :, None].astype(y.dtype)
+    y = _gated_norm(y.reshape(b, S, -1), z, p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"]).astype(x.dtype)
+    if not return_cache:
+        return out
+    W = cfg.ssm_conv_width
+    cache = SSMCache(
+        state=final,
+        conv_x=raw_x[:, -(W - 1):],
+        conv_B=raw_B[:, -(W - 1):],
+        conv_C=raw_C[:, -(W - 1):],
+    )
+    return out, cache
+
+
+class SSMCache(NamedTuple):
+    state: jnp.ndarray  # [B, H, P, N] f32
+    conv_x: jnp.ndarray  # [B, W-1, di]
+    conv_B: jnp.ndarray  # [B, W-1, N]
+    conv_C: jnp.ndarray  # [B, W-1, N]
+
+
+def init_ssm_cache(batch, cfg, dtype):
+    H, P, N, W, di = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_conv_width, cfg.d_inner
+    return SSMCache(
+        state=jnp.zeros((batch, H, P, N), jnp.float32),
+        conv_x=jnp.zeros((batch, W - 1, di), dtype),
+        conv_B=jnp.zeros((batch, W - 1, N), dtype),
+        conv_C=jnp.zeros((batch, W - 1, N), dtype),
+    )
+
+
+def _conv_step(x_new, conv_state, w):
+    """x_new: [B, C]; conv_state: [B, W-1, C] (previous inputs, oldest first)."""
+    full = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # [B, W, C]
+    out = jax.nn.silu(jnp.einsum("bwc,wc->bc", full, w))
+    return out, full[:, 1:, :]
+
+
+def mamba_decode(x, p, cfg, cache: SSMCache):
+    """One-token decode. x: [B, 1, d]. O(1) in context length."""
+    b = x.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    xt = x[:, 0, :]
+    z = jnp.einsum("bd,de->be", xt, p["w_z"])
+    xi, cx = _conv_step(jnp.einsum("bd,de->be", xt, p["w_x"]), cache.conv_x, p["conv_x"])
+    B_, cb = _conv_step(jnp.einsum("bd,dn->bn", xt, p["w_B"]), cache.conv_B, p["conv_B"])
+    C_, cc = _conv_step(jnp.einsum("bd,dn->bn", xt, p["w_C"]), cache.conv_C, p["conv_C"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bd,dh->bh", xt, p["w_dt"]).astype(jnp.float32) + p["dt_bias"]
+    )
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(b, H, P)
+    dA = jnp.exp(dt * A)  # [B, H]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh.astype(jnp.float32), B_.astype(jnp.float32))
+    state = cache.state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state.astype(x.dtype), C_)
+    y = y.astype(x.dtype) + xh * p["D"][None, :, None].astype(x.dtype)
+    y = _gated_norm(y.reshape(b, -1), z, p["norm"])
+    out = jnp.einsum("be,ed->bd", y, p["w_out"]).astype(x.dtype)[:, None, :]
+    return out, SSMCache(state, cx, cb, cc)

@@ -1,0 +1,318 @@
+"""Unified stack: one scan-over-stacked-layers implementation drives all ten
+assigned architectures (dense GQA / SWA / local:global, MLA+MoE, large MoE,
+VLM backbone, encoder-decoder audio backbone, SSD state-space, hybrid).
+
+Per-layer heterogeneity (sliding window size, local-vs-global) is carried as
+*scanned data* (an int32 window per layer) rather than unrolled branches, so
+the HLO stays one-layer-sized for 60-layer models on a 512-device mesh.
+Layers are rematerialized (jax.checkpoint) in training.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .common import dense_init, rms_norm, swiglu
+from .attention import _pet
+from .sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def _init_mlp(key, d, f, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(k1, d, (d, f), dtype),
+        "wu": dense_init(k2, d, (d, f), dtype),
+        "wd": dense_init(k3, f, (f, d), dtype),
+    }
+
+
+def _init_attn_layer(key, cfg, dtype, cross: bool = False):
+    ka, km, kc = jax.random.split(key, 3)
+    init_a = attn.init_mla if cfg.attn_kind == "mla" else attn.init_gqa
+    p = {
+        "attn_norm": jnp.zeros((cfg.d_model,), dtype),
+        "attn": init_a(ka, cfg, dtype),
+        "mlp_norm": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": _init_mlp(km, cfg.d_model, cfg.d_ff, dtype),
+    }
+    if cross:
+        p["cross_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        p["cross"] = attn.init_gqa(kc, cfg, dtype)
+    return p
+
+
+def _init_moe_layer(key, cfg, dtype):
+    ka, km = jax.random.split(key)
+    return {
+        "attn_norm": jnp.zeros((cfg.d_model,), dtype),
+        "attn": (attn.init_mla if cfg.attn_kind == "mla" else attn.init_gqa)(ka, cfg, dtype),
+        "mlp_norm": jnp.zeros((cfg.d_model,), dtype),
+        "moe": moe_mod.init_moe(km, cfg, dtype),
+    }
+
+
+def _init_ssm_layer(key, cfg, dtype):
+    return {
+        "norm": jnp.zeros((cfg.d_model,), dtype),
+        "mamba": ssm_mod.init_mamba(key, cfg, dtype),
+    }
+
+
+def _stack(layer_fn, keys):
+    return jax.vmap(layer_fn)(keys)
+
+
+def init_params(key, cfg) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    d, V, L = cfg.d_model, cfg.padded_vocab, cfg.n_layers
+    params: Dict[str, Any] = {
+        "embed": dense_init(keys[0], d, (V, d), dtype),
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[1], d, (d, V), dtype)
+
+    if cfg.family == "encdec":
+        enc_keys = jax.random.split(keys[2], cfg.n_enc_layers)
+        dec_keys = jax.random.split(keys[3], cfg.n_dec_layers)
+        params["enc_layers"] = _stack(lambda k: _init_attn_layer(k, cfg, dtype), enc_keys)
+        params["layers"] = _stack(
+            lambda k: _init_attn_layer(k, cfg, dtype, cross=True), dec_keys
+        )
+        params["enc_norm"] = jnp.zeros((d,), dtype)
+        return params
+
+    if cfg.family == "ssm":
+        lk = jax.random.split(keys[2], L)
+        params["layers"] = _stack(lambda k: _init_ssm_layer(k, cfg, dtype), lk)
+        return params
+
+    if cfg.family == "hybrid":
+        lk = jax.random.split(keys[2], L)
+        params["layers"] = _stack(lambda k: _init_ssm_layer(k, cfg, dtype), lk)
+        sk = jax.random.split(keys[3], 2)  # two alternating shared blocks
+        params["shared_attn"] = _stack(lambda k: _init_attn_layer(k, cfg, dtype), sk)
+        return params
+
+    if cfg.is_moe:
+        # NOTE: all layers are MoE (the assignment spec lists no leading dense
+        # layers; deviation from the HF checkpoint recorded in DESIGN.md).
+        lk = jax.random.split(keys[3], L)
+        params["layers"] = _stack(lambda k: _init_moe_layer(k, cfg, dtype), lk)
+        return params
+
+    # dense decoder (llama / danube / minicpm / gemma3 / pixtral backbone)
+    lk = jax.random.split(keys[2], L)
+    params["layers"] = _stack(lambda k: _init_attn_layer(k, cfg, dtype), lk)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# train/prefill forward
+
+
+def _res_scale(cfg) -> float:
+    return 1.4 / math.sqrt(cfg.n_layers) if cfg.depth_scaled_residual else 1.0
+
+
+def _attn_fwd(x, p, cfg, positions, window, chunk):
+    """p is the *layer* dict (contains 'attn')."""
+    if cfg.attn_kind == "mla":
+        return attn.mla_train(x, p["attn"], cfg, positions, window=window, chunk=chunk)
+    return attn.gqa_train(x, p["attn"], cfg, positions, window=window, chunk=chunk)
+
+
+def _attn_block(h, p, cfg, positions, window, chunk, causal=True):
+    s = _res_scale(cfg)
+    hn = rms_norm(h, p["attn_norm"], cfg.norm_eps)
+    if causal:
+        a = _attn_fwd(hn, p, cfg, positions, window, chunk)
+    else:  # encoder self-attention
+        q = jnp.einsum("bsd,dhe->bshe", hn, p["attn"]["wq"])
+        k = jnp.einsum("bsd,dhe->bshe", hn, p["attn"]["wk"])
+        v = jnp.einsum("bsd,dhe->bshe", hn, p["attn"]["wv"])
+        q = attn.apply_rope(q, positions, cfg.rope_theta)
+        k = attn.apply_rope(k, positions, cfg.rope_theta)
+        rep = p["attn"]["wq"].shape[1] // p["attn"]["wk"].shape[1]
+        o = attn.flash_ref(
+            q, attn.expand_kv(k, rep), attn.expand_kv(v, rep),
+            causal=False, window=0, chunk=chunk,
+        )
+        a = jnp.einsum("bshe,hed->bsd", o, p["attn"]["wo"])
+    h = h + s * a
+    h = shard(h, "dp", None, None)
+    hn = rms_norm(h, p["mlp_norm"], cfg.norm_eps)
+    if "moe" in p:
+        m, aux = moe_mod.moe_ffn(hn, p["moe"], cfg)
+    else:
+        m, aux = swiglu(hn, p["mlp"]["wg"], p["mlp"]["wu"], p["mlp"]["wd"], pet=_pet(cfg)), 0.0
+    h = shard(h + s * m, "dp", None, None)
+    return h, aux
+
+
+def _ssm_block(h, p, cfg):
+    hn = rms_norm(h, p["norm"], cfg.norm_eps)
+    return shard(h + ssm_mod.mamba_train(hn, p["mamba"], cfg), "dp", None, None)
+
+
+def _shared_block_params(params, layer_idx, every):
+    blk = (layer_idx // every) % 2
+    return jax.tree_util.tree_map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, blk, 0, keepdims=False),
+        params["shared_attn"],
+    )
+
+
+def lm_hidden(params, cfg, x, positions, *, remat: bool = True, chunk: int = 1024):
+    """Run the decoder stack on embeddings x -> (hidden, moe_aux)."""
+    windows = jnp.asarray(cfg.layer_windows[-params_n_layers(params):], jnp.int32)
+
+    if cfg.family == "ssm" or (cfg.family == "hybrid" and not cfg.hybrid_attn_every):
+
+        def body(h, p):
+            return _ssm_block(h, p, cfg), None
+
+        body_fn = jax.checkpoint(body) if remat else body
+        h, _ = jax.lax.scan(body_fn, x, params["layers"])
+        return h, jnp.float32(0.0)
+
+    if cfg.family == "hybrid":
+        # super-block scan: `every` mamba layers then one shared attention
+        # block — n_apps attention blocks in the HLO (a lax.cond per layer
+        # would lower the attention branch n_layers times).
+        every = cfg.hybrid_attn_every
+        n_apps = cfg.n_layers // every
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_apps, every) + a.shape[1:]), params["layers"]
+        )
+
+        def super_block(h, xs):
+            pgroup, app = xs
+
+            def mamba_layer(hh, p):
+                return _ssm_block(hh, p, cfg), None
+
+            h, _ = jax.lax.scan(mamba_layer, h, pgroup)
+            sp = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, app % 2, 0, False),
+                params["shared_attn"],
+            )
+            h, _ = _attn_block(h, sp, cfg, positions, 0, chunk)
+            return h, None
+
+        body_fn = jax.checkpoint(super_block) if remat else super_block
+        h, _ = jax.lax.scan(body_fn, x, (grouped, jnp.arange(n_apps)))
+        return h, jnp.float32(0.0)
+
+    # attention stacks (dense / moe / vlm backbone / decoder of encdec)
+    aux0 = jnp.float32(0.0)
+    wtuple = cfg.layer_windows
+
+    if len(set(wtuple)) == 1:
+        # uniform windows: STATIC python int -> banded flash when > 0
+        w_static = int(wtuple[0])
+
+        def body(carry, p):
+            h, aux = carry
+            h, a = _attn_block(h, p, cfg, positions, w_static, chunk)
+            return (h, aux + a), None
+
+        body_fn = jax.checkpoint(body) if remat else body
+        (h, aux), _ = jax.lax.scan(body_fn, (x, aux0), params["layers"])
+        return h, aux
+
+    if cfg.locals_per_global > 0:
+        # local:global pattern: scan over period-sized groups, positions
+        # unrolled inside so every window is STATIC (banded locals)
+        period = cfg.locals_per_global + 1
+        n_groups = cfg.n_layers // period
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_groups, period) + a.shape[1:]), params["layers"]
+        )
+
+        def group_body(carry, pgroup):
+            h, aux = carry
+            for j in range(period):
+                pj = jax.tree_util.tree_map(lambda a: a[j], pgroup)
+                h, a = _attn_block(h, pj, cfg, positions, int(wtuple[j]), chunk)
+                aux = aux + a
+            return (h, aux), None
+
+        body_fn = jax.checkpoint(group_body) if remat else group_body
+        (h, aux), _ = jax.lax.scan(body_fn, (x, aux0), grouped)
+        return h, aux
+
+    def body(carry, xs):
+        h, aux = carry
+        p, w = xs
+        h, a = _attn_block(h, p, cfg, positions, w, chunk)
+        return (h, aux + a), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (h, aux), _ = jax.lax.scan(body_fn, (x, aux0), (params["layers"], windows))
+    return h, aux
+
+
+def params_n_layers(params) -> int:
+    return jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper)
+
+
+def encode(params, cfg, frames, *, remat: bool = True, chunk: int = 1024):
+    """frames: [B, enc_S, d] precomputed frame embeddings (stub frontend)."""
+    B, S, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(h, p):
+        h, _ = _attn_block(h, p, cfg, positions, 0, chunk, causal=False)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body_fn, frames, params["enc_layers"])
+    return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_attn(x, p, cfg, enc_kv, chunk):
+    """Cross-attention: queries from x, K/V precomputed from encoder output."""
+    k, v = enc_kv
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    rep = p["wq"].shape[1] // p["wk"].shape[1]
+    o = attn.flash_ref(
+        q, attn.expand_kv(k, rep), attn.expand_kv(v, rep),
+        causal=False, window=0, chunk=chunk,
+    )
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"])
+
+
+def decoder_hidden(params, cfg, x, positions, enc_out, *, remat=True, chunk=1024):
+    """Whisper decoder: causal self-attn + cross-attn + mlp, scanned."""
+
+    def body(h, p):
+        hn = rms_norm(h, p["attn_norm"], cfg.norm_eps)
+        h = h + _attn_fwd(hn, p, cfg, positions, 0, chunk)
+        hn = rms_norm(h, p["cross_norm"], cfg.norm_eps)
+        k = jnp.einsum("bsd,dhe->bshe", enc_out, p["cross"]["wk"])
+        v = jnp.einsum("bsd,dhe->bshe", enc_out, p["cross"]["wv"])
+        h = h + _cross_attn(hn, p["cross"], cfg, (k, v), chunk)
+        hn = rms_norm(h, p["mlp_norm"], cfg.norm_eps)
+        h = h + swiglu(hn, p["mlp"]["wg"], p["mlp"]["wu"], p["mlp"]["wd"])
+        return shard(h, "dp", None, None), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body_fn, x, params["layers"])
+    return h

@@ -1,0 +1,15 @@
+"""repro.optim — optimizers, schedules, clipping, gradient compression."""
+
+from .optimizer import OptState, make_adafactor_momentum, make_adamw
+from .schedules import cosine_schedule, wsd_schedule
+from .compress import int8_compress_decompress, make_ef_compressor
+
+__all__ = [
+    "OptState",
+    "cosine_schedule",
+    "int8_compress_decompress",
+    "make_adafactor_momentum",
+    "make_adamw",
+    "make_ef_compressor",
+    "wsd_schedule",
+]

@@ -1,0 +1,138 @@
+"""Functional optimizers (optax-free, pytree-native).
+
+Two flavors:
+
+* make_adamw        — fp32 m/v states (standard; <=300B-class archs).
+* make_adafactor_momentum — bf16 momentum + row/col-factored second moment.
+  For the 1T-param arch: AdamW fp32 states alone are 8 TB — more than two
+  v5e pods of HBM — while factored-v + bf16-m is ~2 TB (see EXPERIMENTS.md
+  §Dry-run).  Optimizer state inherits the parameter sharding, so ZeRO-1
+  falls out of the fsdp param specs for free.
+
+Both apply decoupled weight decay and global-norm clipping.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray  # int32 scalar
+    m: Any
+    v: Any  # adamw: full; factored: (row, col) tuples for >=2D params
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], OptState]
+    apply: Callable[[Any, Any, OptState], tuple]  # (params, grads, state) -> (params, state)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def make_adamw(
+    lr: Callable, *, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1, clip_norm=1.0
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def apply(params, grads, state):
+        grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        lr_t = lr(step)
+        bc1 = 1 - b1**t
+        bc2 = 1 - b2**t
+
+        def upd(p, g, m, v):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            decay = weight_decay if p.ndim >= 2 else 0.0
+            new_p = p.astype(jnp.float32) - lr_t * (u + decay * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), m, v
+
+        out = jax.tree_util.tree_map(upd, params, grads, state.m, state.v)
+        new_p = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(step=step, m=new_m, v=new_v)
+
+    return Optimizer(init, apply)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def make_adafactor_momentum(
+    lr: Callable, *, b1=0.9, decay=0.99, eps=1e-30, weight_decay=0.1, clip_norm=1.0
+) -> Optimizer:
+    """bf16 momentum + factored second moment (rows/cols over the last two dims)."""
+
+    def init(params):
+        def v_init(p):
+            if _factored(p):
+                return (
+                    jnp.zeros(p.shape[:-1], jnp.float32),  # row: reduce last dim
+                    jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),  # col
+                )
+            return jnp.zeros(p.shape, jnp.float32)
+
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params),
+            v=jax.tree_util.tree_map(v_init, params),
+        )
+
+    def apply(params, grads, state):
+        grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr_t = lr(step)
+
+        def upd(p, g, m, v):
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr, vc = v
+                vr = decay * vr + (1 - decay) * g2.mean(axis=-1)
+                vc = decay * vc + (1 - decay) * g2.mean(axis=-2)
+                denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                vhat = vr[..., None] * vc[..., None, :] / denom[..., None]
+                new_v = (vr, vc)
+            else:
+                vhat = decay * v + (1 - decay) * g2
+                new_v = vhat
+            u = g / jnp.sqrt(vhat + eps)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * u
+            dec = weight_decay if p.ndim >= 2 else 0.0
+            new_p = p.astype(jnp.float32) - lr_t * (mf + dec * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), mf.astype(jnp.bfloat16), new_v
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.m)
+        flat_v = tdef.flatten_up_to(state.v)
+        res = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([r[0] for r in res])
+        new_m = tdef.unflatten([r[1] for r in res])
+        new_v = tdef.unflatten([r[2] for r in res])
+        return new_p, OptState(step=step, m=new_m, v=new_v)
+
+    return Optimizer(init, apply)

@@ -1,0 +1,32 @@
+"""LR schedules.  WSD (warmup-stable-decay) is first-class because minicpm-2b
+(assigned arch) was trained with it [arXiv:2404.06395]."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(peak_lr: float, warmup: int, stable: int, decay: int, floor: float = 0.1):
+    """Warmup-Stable-Decay: linear warmup -> flat -> exponential-ish decay to
+    floor*peak over `decay` steps."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        in_decay = jnp.maximum(step - (warmup + stable), 0.0)
+        frac = jnp.minimum(in_decay / jnp.maximum(decay, 1), 1.0)
+        decayed = peak_lr * (floor ** frac)
+        return jnp.where(step < warmup + stable, warm, decayed)
+
+    return lr
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+
+    return lr

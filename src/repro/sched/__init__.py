@@ -1,0 +1,36 @@
+"""repro.sched — the paper's work-stealing adapted to SPMD TPU training.
+
+Mapping (see DESIGN.md §2): per-worker microbatch FIFO queues; the queue-head
+MaxRegister becomes an all-reduce(max) over per-worker head views, and the
+RangeMaxRegister becomes each worker's *stale local* view — eliding the
+collective entirely on the fast path.  Modes:
+
+* ``static``    — no stealing (baseline).
+* ``ws-mult``   — fresh global head view + claim resolution every round
+                  (per-round tiny collective; zero duplicate compute) — the
+                  WS-MULT / B-WS analogue where the MaxRegister is consulted
+                  per operation.
+* ``ws-wmult``  — collective-free rounds on stale local views; duplicates are
+                  possible but (a) bounded — a worker never re-extracts a task
+                  it extracted (weak multiplicity), and (b) *counted*, so the
+                  gradient normalization stays correct.
+* ``sync_every=k`` interpolates (periodic RangeMaxRegister refresh).
+"""
+
+from .policy import pick_ranked, pick_tasks, resolve_claims, sync_views
+from .rounds import MODES, RoundStats, run_lockstep_rounds, schedule_rounds
+from .simulator import async_makespan
+from .accumulate import ws_accumulate_grads
+
+__all__ = [
+    "MODES",
+    "RoundStats",
+    "async_makespan",
+    "pick_ranked",
+    "pick_tasks",
+    "resolve_claims",
+    "run_lockstep_rounds",
+    "schedule_rounds",
+    "sync_views",
+    "ws_accumulate_grads",
+]

@@ -1,0 +1,116 @@
+"""Work-stealing gradient accumulation (the scheduler's training integration).
+
+One global step = ``max_rounds`` lockstep rounds.  The schedule (who extracts
+which microbatch task, per round) is computed by the same policy as
+rounds.py, *inside the jitted step* — pure int32 ops that GSPMD replicates;
+their cost is invisible next to the per-round grad computation.  The per-task
+extraction counts make the multiplicity relaxation exact for SGD: an
+extraction of task t contributes weight 1/count_t, so every task contributes
+exactly once no matter how many workers (re)computed it.
+
+Data movement is real: a stolen task's microbatch is gathered from the
+victim's shard (``jnp.take`` over the task-sharded batch), which is exactly
+"shipping the stolen task" and shows up in the dry-run collective bytes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .rounds import schedule_rounds
+
+
+def ws_accumulate_grads(
+    loss_fn: Callable[..., jnp.ndarray],
+    params: Any,
+    batch: Any,
+    tails: jnp.ndarray,
+    *,
+    n_workers: int,
+    mode: str = "ws-wmult",
+    sync_every: int = 1,
+    max_rounds: int | None = None,
+    slack: int = 2,
+    flat_loss: bool = False,
+):
+    """Accumulate gradients over one global step with work-stealing rounds.
+
+    Args:
+      loss_fn: default contract ``loss_fn(params, micro) -> [n_workers]``
+        per-microbatch mean losses, with ``micro`` = batch gathered to
+        [n_workers, ...].  With ``flat_loss=True`` the SPMD-friendly
+        contract is used instead: ``loss_fn(params, flat_micro,
+        row_weights) -> scalar`` where flat_micro leaves are
+        [n_workers*rows, ...] (leading dim stays sharded over dp — no vmap,
+        so GSPMD keeps the batch dim partitioned) and row_weights sum to
+        the round's total task weight.
+      batch: pytree whose leaves have leading dim n_tasks (global microbatch
+        index, sharded over the DP axes).
+      tails: [n_queues] number of tasks each worker queue owns
+        (sum == n_tasks).  Data-dependent (e.g. variable-length packing).
+
+    Returns (mean_loss, grads, aux) with aux = dict(counts, coverage, extractions).
+    """
+    n_tasks = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    if max_rounds is None:
+        base = -(-n_tasks // n_workers)  # ceil
+        if mode == "ws-mult-ranked":
+            max_rounds = base + slack  # exact redistribution
+        elif mode == "ws-wmult-deque":
+            max_rounds = max(base + slack, n_tasks // 2 + slack + 1)
+        else:  # static / ws-mult / ws-wmult: head-only progress on worst skew
+            max_rounds = n_tasks
+
+    assignment, counts, _done = schedule_rounds(
+        tails, n_workers, mode, sync_every, max_rounds, n_tasks
+    )
+
+    def round_body(carry, ass_r):
+        grads, loss_acc, wsum = carry
+        valid = ass_r >= 0
+        safe = jnp.maximum(ass_r, 0)
+        # 1/count weighting makes the relaxation exact for the gradient.
+        w = valid.astype(jnp.float32) / jnp.maximum(counts[safe], 1)
+        micro = jax.tree_util.tree_map(lambda x: x[safe], batch)
+
+        if flat_loss:
+            from repro.models.sharding import shard as _shard
+
+            rows = jax.tree_util.tree_leaves(micro)[0].shape[1]
+            flat = jax.tree_util.tree_map(
+                lambda x: _shard(
+                    x.reshape((-1,) + x.shape[2:]), "dp", *([None] * (x.ndim - 2))
+                ),
+                micro,
+            )
+            row_w = jnp.repeat(w, rows) / rows
+
+            def weighted_loss(p):
+                return loss_fn(p, flat, row_w)
+
+        else:
+
+            def weighted_loss(p):
+                losses = loss_fn(p, micro)  # [n_workers]
+                return (losses * w).sum()
+
+        l, g = jax.value_and_grad(weighted_loss)(params)
+        grads = jax.tree_util.tree_map(jnp.add, grads, g)
+        return (grads, loss_acc + l, wsum + w.sum()), None
+
+    zero_grads = jax.tree_util.tree_map(jnp.zeros_like, params)
+    (grads, loss_acc, wsum), _ = jax.lax.scan(
+        round_body, (zero_grads, jnp.float32(0.0), jnp.float32(0.0)), assignment
+    )
+    denom = jnp.maximum(wsum, 1e-6)
+    grads = jax.tree_util.tree_map(lambda g: g / denom, grads)
+    aux = {
+        "counts": counts,
+        "coverage": (counts > 0).mean(),
+        "extractions": counts.sum(),
+        "loss_weight": wsum,
+    }
+    return loss_acc / denom, grads, aux

@@ -1,0 +1,197 @@
+"""Pure-jnp scheduler policy: Take/Steal picks over per-worker head views.
+
+State layout (everything int32):
+
+* ``tails[n_q]``  — per-queue tail (number of tasks the owner Put).  Tasks are
+  microbatch indices; queue q owns the global index range
+  [bases[q], bases[q] + tails[q]) with ``bases = cumsum(tails) - tails``.
+  Puts are a local owner action (the paper's O(1) fence-free Put) and happen
+  at step assembly; during the rounds tails are constant.
+* ``view[n_q]``   — ONE worker's local lower bounds on every queue's head.
+  This is exactly the paper's RangeMaxRegister state vector: ``view[q]`` is
+  worker w's persistent local ``r`` for queue q's Head, and the true head is
+  ``max_w view_w[q]``.
+
+Pick rules (FIFO head extraction, per the paper's insert/extract order):
+
+* ``pick_tasks``  — Take from the own queue if non-empty in the view, else
+  Steal the *head* of a victim queue.  ``victim_policy``:
+  - 'richest': most remaining in view (tie → lower qid);
+  - 'random' : salted hash over eligible victims — decorrelates thieves
+    between workers/rounds without any communication.
+  Thieves contending on the same head is precisely the paper's multiplicity;
+  in ws-wmult mode such picks duplicate (bounded, counted), in claim modes
+  they are arbitrated.
+
+* ``pick_ranked`` — beyond-paper exact mode (requires views synced first):
+  every worker deterministically computes this round's full steal allocation
+  from the shared view — stealers are ranked by id and take distinct
+  depth-major slots across victim queues.  Zero collisions, zero idle-by-
+  collision, no claim collective needed.  Only sound when views are unified
+  (fresh MaxRegister read); with stale views it could mark skipped tasks as
+  done, so ws-wmult must NOT use it.
+
+All functions are shape-polymorphic pure jnp so they run identically inside
+``shard_map`` (per-device ``view`` rows, ``jax.lax.pmax`` for sync) and in the
+vmapped lockstep simulator (``view`` matrix, axis-0 max for sync).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def queue_bases(tails: jnp.ndarray) -> jnp.ndarray:
+    """Global task-index base of each queue."""
+    return jnp.cumsum(tails) - tails
+
+
+def _hash(x: jnp.ndarray) -> jnp.ndarray:
+    """Cheap int32 mixing (xorshift-multiply) for salted victim selection."""
+    x = jnp.uint32(x) if not isinstance(x, jnp.ndarray) else x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def pick_tasks(
+    view: jnp.ndarray,
+    tails: jnp.ndarray,
+    worker_id: jnp.ndarray,
+    salt: jnp.ndarray | int = 0,
+    victim_policy: str = "richest",
+):
+    """One worker's Take-else-Steal pick (head extraction only).
+
+    Returns (task, queue, new_view): ``task`` is the global task index or -1;
+    ``queue`` the queue it came from (or -1); ``new_view`` the view with that
+    queue's local head advanced (the paper's local ``head <- head+1``).
+    """
+    n_q = tails.shape[0]
+    remaining = jnp.maximum(tails - view, 0)
+    bases = queue_bases(tails)
+
+    have_own = remaining[worker_id] > 0
+
+    qids = jnp.arange(n_q)
+    eligible = (qids != worker_id) & (remaining > 0)
+    if victim_policy == "random":
+        salt_v = jnp.asarray(salt, dtype=jnp.int32)
+        score = _hash(
+            qids.astype(jnp.uint32)
+            + _hash(jnp.uint32(worker_id) * jnp.uint32(2654435761))
+            + jnp.uint32(salt_v) * jnp.uint32(40503)
+        ).astype(jnp.int32) & jnp.int32(0x7FFFFFFF)
+        score = jnp.where(eligible, score, -1)
+    else:
+        score = jnp.where(eligible, remaining, -1)
+    victim = jnp.argmax(score)
+    can_steal = score[victim] > 0 if victim_policy == "richest" else eligible[victim]
+
+    queue = jnp.where(have_own, worker_id, jnp.where(can_steal, victim, -1))
+    got = queue >= 0
+    safe_q = jnp.maximum(queue, 0)
+    task = jnp.where(got, bases[safe_q] + view[safe_q], -1)
+    new_view = jnp.where(got, view.at[safe_q].add(1), view)
+    return task, queue, new_view
+
+
+def pick_ranked(view: jnp.ndarray, tails: jnp.ndarray, worker_id: jnp.ndarray,
+                n_workers: int):
+    """Deterministic collision-free pick from a *synced* view (see module doc).
+
+    Own-queue owners take their head.  Stealers (workers whose own queue is
+    empty in the shared view) are ranked by id; steal slots are the non-head
+    remainder of every non-empty queue, enumerated depth-major (all depth-1
+    slots by qid, then depth-2, ...), and stealer #r takes slot #r.  Depth is
+    bounded by the number of stealers < n_workers.
+    """
+    n_q = tails.shape[0]
+    remaining = jnp.maximum(tails - view, 0)
+    bases = queue_bases(tails)
+
+    have_own = remaining[worker_id] > 0
+    own_task = bases[worker_id] + view[worker_id]
+
+    # my rank among stealers (workers are queue owners: n_workers == n_q)
+    is_stealer = remaining[:n_workers] == 0
+    rank = jnp.cumsum(is_stealer.astype(jnp.int32))[worker_id] - 1
+
+    # steal slots per queue: everything behind the head (the owner takes the head)
+    steal_cnt = jnp.maximum(remaining - 1, 0)
+    # depth-major enumeration: level d has count_d = #{q : steal_cnt[q] > d}
+    depths = jnp.arange(n_workers)[:, None]  # max useful depth < n_workers
+    level_cnt = (steal_cnt[None, :] > depths).sum(axis=1)  # [n_workers]
+    cum = jnp.cumsum(level_cnt) - level_cnt  # slots before level d
+    total_slots = level_cnt.sum()
+
+    # my slot: level d* = last level with cum <= rank; position p within it
+    d_star = jnp.sum((cum <= rank) & (level_cnt > 0)) - 1
+    d_star = jnp.maximum(d_star, 0)
+    p = rank - cum[d_star]
+    in_level = steal_cnt > d_star
+    pos_in_level = jnp.cumsum(in_level.astype(jnp.int32)) - 1
+    q_star = jnp.argmax(in_level & (pos_in_level == p))
+
+    can_steal = (~have_own) & (rank >= 0) & (rank < total_slots)
+    offset = view[q_star] + 1 + d_star
+    steal_task = bases[q_star] + offset
+
+    task = jnp.where(have_own, own_task, jnp.where(can_steal, steal_task, -1))
+    # local head bounds: owner head+1; stealer knows [head, offset] all extract
+    # this round (lower ranks fill shallower depths), so it may advance to
+    # offset+1 — sound ONLY because the view is shared/synced.
+    new_view = jnp.where(
+        have_own,
+        view.at[worker_id].add(1),
+        jnp.where(can_steal, view.at[q_star].set(offset + 1), view),
+    )
+    return task, new_view
+
+
+def sync_views(views: jnp.ndarray, axis_name: str | None = None) -> jnp.ndarray:
+    """MaxRegister read: the true head is the max over workers' local views.
+
+    Inside shard_map pass ``axis_name`` (per-device row + pmax); in the
+    simulator pass the [n_w, n_q] matrix (axis-0 max, broadcast back).
+    """
+    if axis_name is not None:
+        return jax.lax.pmax(views, axis_name)
+    m = views.max(axis=0, keepdims=True)
+    return jnp.broadcast_to(m, views.shape)
+
+
+def resolve_claims(
+    tasks: jnp.ndarray,
+    worker_ids: jnp.ndarray,
+    n_tasks: int,
+    axis_name: str | None = None,
+):
+    """B-WS-style claim resolution: at most one worker wins each task.
+
+    The paper's Swap becomes a deterministic min-reduce: every worker writes
+    (its id) into its picked task's slot; the all-reduce(min) elects the
+    lowest id.  Returns a bool per worker: did *my* claim win?
+
+    ``tasks``: per-worker picked task (or -1).  In shard_map form, ``tasks``
+    is a scalar per device and the claim table rides one tiny collective.
+    """
+    big = jnp.int32(2**30)
+    if axis_name is not None:
+        # per-device scalar task -> one-hot claim row, pmin over devices
+        claim = jnp.full((n_tasks,), big, dtype=jnp.int32)
+        safe_t = jnp.maximum(tasks, 0)
+        claim = jnp.where(
+            (jnp.arange(n_tasks) == safe_t) & (tasks >= 0), worker_ids, claim
+        )
+        table = jax.lax.pmin(claim, axis_name)
+        won = (tasks >= 0) & (table[jnp.maximum(tasks, 0)] == worker_ids)
+        return won
+    # simulator form: tasks [n_w], worker_ids [n_w]
+    claim = jnp.full((n_tasks,), big, dtype=jnp.int32)
+    safe_t = jnp.maximum(tasks, 0)
+    claim = claim.at[safe_t].min(jnp.where(tasks >= 0, worker_ids, big))
+    won = (tasks >= 0) & (claim[safe_t] == worker_ids)
+    return won

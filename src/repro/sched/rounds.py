@@ -1,0 +1,259 @@
+"""Lockstep round driver: run Take/Steal rounds for all workers under a mode.
+
+This is the SPMD execution model of the scheduler (DESIGN.md §2): one *round*
+= every worker extracts ≤ 1 microbatch task and processes it; rounds proceed
+in lockstep (that is what a single jitted program gives you).
+
+The views matrix [n_workers, n_queues] carries every worker's
+RangeMaxRegister state: ``views[w, q]`` is worker w's persistent local lower
+bound on queue q's head (its local ``r``).  The paper's shared register ``R``
+maps to the *board*: an all-reduce(max) of the views whose result is consumed
+``one round later`` — i.e. an **async collective that never blocks the
+critical path**.  Reading the board is exactly RMaxRead: ``max(local r, stale
+R)``, a valid lower bound that always includes the worker's own extractions,
+so no worker ever re-extracts a task it extracted (weak multiplicity), while
+cross-worker staleness can duplicate work — boundedly and countedly.
+
+Modes:
+
+* static         — no stealing: a worker only drains its own queue; no board.
+* ws-mult        — blocking MaxRegister semantics, paper-faithful: views are
+                   pmax-unified every round and same-head contention is
+                   arbitrated by a claim min-reduce (the B-WS Swap analogue).
+                   A *synchronous* collective per round; zero duplicate
+                   compute; thieves that lose a claim idle that round.
+* ws-mult-ranked — beyond-paper exact mode: the synced view lets every
+                   stealer deterministically take a distinct steal slot
+                   (pick_ranked) — no claims, no idle-by-collision.  Still one
+                   blocking collective per round.
+* ws-wmult       — collective-free fast path: picks use only local views
+                   merged with the stale async board (refreshed every
+                   ``sync_every`` rounds, consumed the following round).
+                   Victims are salt-randomized to decorrelate thieves.
+                   Duplicates possible-but-counted.
+* ws-wmult-deque — collective-free AND net-progress in lockstep: owners drain
+                   their queue from the HEAD, thieves steal from the TAIL
+                   behind a per-queue *reverse watermark* (monotonically
+                   decreasing; published on the async board with min-merge).
+                   The two frontiers meet in the middle; staleness only
+                   duplicates the crossover region, never loses a task.  This
+                   is the paper's §9 "other insert/extract orders" direction:
+                   the FIFO head-only queue admits ≤1 net extraction per queue
+                   per round in BSP no matter how many thieves (head
+                   contention IS multiplicity), so lockstep redistribution
+                   needs either a synced view (ws-mult-ranked) or opposite-end
+                   extraction (this mode).
+
+Returns the per-round assignment (for gradient accumulation), per-task
+extraction counts, and scheduling statistics (rounds used, duplicate ratio,
+blocking/async collectives issued) — the quantities tabulated in
+EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .policy import _hash, pick_ranked, pick_tasks, queue_bases, resolve_claims, sync_views
+
+MODES = ("static", "ws-mult", "ws-mult-ranked", "ws-wmult", "ws-wmult-deque")
+
+
+@dataclass
+class RoundStats:
+    rounds_used: int
+    total_picks: int
+    duplicate_picks: int
+    idle_worker_rounds: int
+    blocking_collectives: int
+    async_collectives: int
+
+    @property
+    def duplicate_ratio(self) -> float:
+        return self.duplicate_picks / max(self.total_picks, 1)
+
+
+def schedule_rounds(
+    tails: jnp.ndarray,
+    n_workers: int,
+    mode: str,
+    sync_every: int,
+    max_rounds: int,
+    n_tasks: int,
+):
+    """Traced schedule computation shared by the driver and by train steps.
+
+    Returns (assignment [R, n_w] int32 task-or--1, counts [n_tasks] int32,
+    done_round int32: first round after which every task was extracted, or -1).
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode {mode!r} not in {MODES}")
+    if mode == "ws-wmult-deque":
+        return _schedule_deque(tails, n_workers, sync_every, max_rounds, n_tasks)
+    n_q = tails.shape[0]
+    worker_ids = jnp.arange(n_workers, dtype=jnp.int32)
+
+    def pick_one(view, wid, r):
+        if mode == "static":
+            have = tails[wid] - view[wid] > 0
+            task = jnp.where(have, queue_bases(tails)[wid] + view[wid], -1)
+            new_view = jnp.where(have, view.at[wid].add(1), view)
+            return task, new_view
+        if mode == "ws-mult-ranked":
+            return pick_ranked(view, tails, wid, n_workers)
+        task, _q, new_view = pick_tasks(
+            view, tails, wid, salt=r, victim_policy="random"
+        )
+        return task, new_view
+
+    def body(carry, r):
+        views, board, counts, done_round = carry
+        if mode == "ws-wmult":
+            # RMaxRead: merge the stale async board into the local view.
+            views = jnp.maximum(views, board[None, :])
+        tasks, new_views = jax.vmap(pick_one, in_axes=(0, 0, None))(
+            views, worker_ids, r
+        )
+
+        if mode == "ws-mult":
+            won = resolve_claims(tasks, worker_ids, n_tasks, axis_name=None)
+            eff = jnp.where(won, tasks, -1)
+            new_views = sync_views(new_views)  # blocking MaxRegister publish
+        elif mode == "ws-mult-ranked":
+            eff = tasks
+            new_views = sync_views(new_views)
+        else:
+            eff = tasks
+            if mode == "ws-wmult":
+                refresh = (r % jnp.maximum(sync_every, 1)) == 0
+                board = jnp.where(refresh, new_views.max(axis=0), board)
+
+        valid = eff >= 0
+        counts = counts.at[jnp.maximum(eff, 0)].add(valid.astype(jnp.int32))
+        all_done = (counts > 0).all()
+        done_round = jnp.where((done_round < 0) & all_done, r + 1, done_round)
+        return (new_views, board, counts, done_round), eff
+
+    views0 = jnp.zeros((n_workers, n_q), dtype=jnp.int32)
+    board0 = jnp.zeros((n_q,), dtype=jnp.int32)
+    counts0 = jnp.zeros((n_tasks,), dtype=jnp.int32)
+    (_, _, counts, done_round), assignment = jax.lax.scan(
+        body, (views0, board0, counts0, jnp.int32(-1)), jnp.arange(max_rounds)
+    )
+    return assignment, counts, done_round
+
+
+def _schedule_deque(tails, n_workers, sync_every, max_rounds, n_tasks):
+    """ws-wmult-deque scheduling (see module docstring).
+
+    Per-worker state: ``heads[w, q]`` (forward frontier view, max-merged
+    board) and ``rwms[w, q]`` (reverse watermark view, min-merged board).
+    Queue q has unextracted-by-someone slots in [true_head, true_rwm); a
+    worker believes slots remain while ``heads[w,q] < rwms[w,q]``.
+    """
+    n_q = tails.shape[0]
+    worker_ids = jnp.arange(n_workers, dtype=jnp.int32)
+    bases = queue_bases(tails)
+
+    def pick_one(head_v, rwm_v, wid, r):
+        remaining = jnp.maximum(rwm_v - head_v, 0)
+        have_own = remaining[wid] > 0
+        own_task = bases[wid] + head_v[wid]
+
+        qids = jnp.arange(n_q)
+        eligible = (qids != wid) & (remaining > 0)
+        score = _hash(
+            qids.astype(jnp.uint32)
+            + _hash(jnp.uint32(wid) * jnp.uint32(2654435761))
+            + jnp.uint32(r) * jnp.uint32(40503)
+        ).astype(jnp.int32) & jnp.int32(0x7FFFFFFF)
+        score = jnp.where(eligible, score, -1)
+        victim = jnp.argmax(score)
+        can_steal = eligible[victim]
+
+        steal_task = bases[victim] + rwm_v[victim] - 1
+        task = jnp.where(have_own, own_task, jnp.where(can_steal, steal_task, -1))
+        new_head = jnp.where(have_own, head_v.at[wid].add(1), head_v)
+        new_rwm = jnp.where(
+            have_own, rwm_v, jnp.where(can_steal, rwm_v.at[victim].add(-1), rwm_v)
+        )
+        return task, new_head, new_rwm
+
+    def body(carry, r):
+        heads, rwms, b_head, b_rwm, counts, done_round = carry
+        # RMaxRead / reverse: merge the stale async boards
+        heads = jnp.maximum(heads, b_head[None, :])
+        rwms = jnp.minimum(rwms, b_rwm[None, :])
+        tasks, new_heads, new_rwms = jax.vmap(
+            pick_one, in_axes=(0, 0, 0, None)
+        )(heads, rwms, worker_ids, r)
+
+        refresh = (r % jnp.maximum(sync_every, 1)) == 0
+        b_head = jnp.where(refresh, new_heads.max(axis=0), b_head)
+        b_rwm = jnp.where(refresh, new_rwms.min(axis=0), b_rwm)
+
+        valid = tasks >= 0
+        counts = counts.at[jnp.maximum(tasks, 0)].add(valid.astype(jnp.int32))
+        all_done = (counts > 0).all()
+        done_round = jnp.where((done_round < 0) & all_done, r + 1, done_round)
+        return (new_heads, new_rwms, b_head, b_rwm, counts, done_round), tasks
+
+    heads0 = jnp.zeros((n_workers, n_q), dtype=jnp.int32)
+    rwms0 = jnp.broadcast_to(tails[None, :], (n_workers, n_q)).astype(jnp.int32)
+    counts0 = jnp.zeros((n_tasks,), dtype=jnp.int32)
+    (_, _, _, _, counts, done_round), assignment = jax.lax.scan(
+        body,
+        (heads0, rwms0, heads0[0], rwms0[0], counts0, jnp.int32(-1)),
+        jnp.arange(max_rounds),
+    )
+    return assignment, counts, done_round
+
+
+@partial(jax.jit, static_argnames=("n_workers", "mode", "sync_every", "max_rounds", "n_tasks"))
+def _run(tails, n_workers, mode, sync_every, max_rounds, n_tasks):
+    return schedule_rounds(tails, n_workers, mode, sync_every, max_rounds, n_tasks)
+
+
+def run_lockstep_rounds(
+    tails,
+    n_workers: int,
+    mode: str = "ws-wmult",
+    sync_every: int = 1,
+    max_rounds: int | None = None,
+):
+    """Run the scheduler; returns (assignment [R, n_w], counts, RoundStats).
+
+    ``counts[t]`` is how many workers extracted task t; the done-condition is
+    every task extracted at least once (the paper's at-least-once guarantee).
+    """
+    tails = jnp.asarray(tails, dtype=jnp.int32)
+    n_tasks = int(tails.sum())
+    if max_rounds is None:
+        max_rounds = int(tails.max()) if mode == "static" else n_tasks
+        max_rounds = max(max_rounds, 1)
+    assignment, counts, done_round = _run(
+        tails, n_workers, mode, sync_every, max_rounds, n_tasks
+    )
+    assignment = jax.device_get(assignment)
+    counts = jax.device_get(counts)
+    rounds_used = int(done_round) if int(done_round) >= 0 else max_rounds
+    total_picks = int((assignment[:rounds_used] >= 0).sum())
+    dup = int(total_picks - (counts > 0).sum())
+    idle = int(rounds_used * n_workers - total_picks)
+    blocking = rounds_used if mode in ("ws-mult", "ws-mult-ranked") else 0
+    async_c = 0
+    if mode in ("ws-wmult", "ws-wmult-deque"):
+        async_c = max(1, rounds_used // max(sync_every, 1))
+    stats = RoundStats(
+        rounds_used=rounds_used,
+        total_picks=total_picks,
+        duplicate_picks=dup,
+        idle_worker_rounds=idle,
+        blocking_collectives=blocking,
+        async_collectives=async_c,
+    )
+    return assignment[:rounds_used], counts, stats

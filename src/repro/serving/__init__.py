@@ -1,0 +1,5 @@
+"""repro.serving — KV-cache serving with work-stealing request scheduling."""
+
+from .engine import ContinuousBatcher, Request, WorkStealingFrontend
+
+__all__ = ["ContinuousBatcher", "Request", "WorkStealingFrontend"]

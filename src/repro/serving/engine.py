@@ -1,0 +1,165 @@
+"""Continuous-batching serving engine + work-stealing request frontend.
+
+Two layers:
+
+* ContinuousBatcher — the device side: a fixed pool of B decode slots over
+  stacked KV caches.  Admitting a request runs a batch-1 prefill and splices
+  its caches into the slot (dynamic_update_slice on the batch dim); every
+  engine step decodes all live slots in one jitted decode_step; finished
+  slots free immediately and are refilled the same step (the vLLM-style
+  iteration-level scheduling, in JAX).
+
+* WorkStealingFrontend — the host side: per-engine-replica request queues
+  implemented with the *literal* WS-WMULT algorithm (paper Fig. 7).  Each
+  replica's scheduler thread Takes from its own queue and Steals from busy
+  replicas when idle; weak multiplicity means a request may be admitted by
+  two replicas under contention — admission is idempotent (same tokens) and
+  the frontend deduplicates on completion, keeping whichever finished first.
+  This is the paper's fence-free load balancing as a serving feature: no
+  lock and no CAS anywhere on the request hot path.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EMPTY, WSWMult
+from repro.models import Caches, decode_step, init_caches, prefill
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray  # [T] int32 prompt
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+
+
+class ContinuousBatcher:
+    def __init__(self, params, cfg, *, slots: int, capacity: int, greedy: bool = True):
+        self.params, self.cfg = params, cfg
+        self.B, self.cap = slots, capacity
+        self.caches = init_caches(cfg, slots, capacity)
+        self.live: List[Optional[Request]] = [None] * slots
+        self.pos = np.zeros(slots, dtype=np.int32)  # next write slot per seq
+        self.budget = np.zeros(slots, dtype=np.int32)
+        self.greedy = greedy
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos)
+        )
+        self._prefill = jax.jit(
+            lambda p, b, cap=capacity: prefill(p, cfg, b, capacity=cap)
+        )
+
+    # -- admission ------------------------------------------------------------
+    def admit(self, req: Request) -> bool:
+        free = [i for i, r in enumerate(self.live) if r is None]
+        if not free:
+            return False
+        slot = free[0]
+        batch = {"tokens": jnp.asarray(req.tokens, jnp.int32)[None, :]}
+        logits, c1 = self._prefill(self.params, batch)
+        # splice the batch-1 caches into this slot
+        def splice(full, one):
+            if not hasattr(one, "ndim"):
+                return full
+            return jax.lax.dynamic_update_slice_in_dim(full, one, slot, axis=1)
+
+        self.caches = jax.tree_util.tree_map(splice, self.caches, c1)
+        first = int(jnp.argmax(logits[0]))
+        req.out.append(first)
+        self.live[slot] = req
+        self.pos[slot] = len(req.tokens)
+        self.budget[slot] = req.max_new - 1
+        return True
+
+    # -- one engine iteration ---------------------------------------------------
+    def step(self) -> List[Request]:
+        if not any(r is not None for r in self.live):
+            return []
+        tokens = np.zeros((self.B, 1), dtype=np.int32)
+        for i, r in enumerate(self.live):
+            if r is not None:
+                tokens[i, 0] = r.out[-1]
+        # per-slot decode positions (heterogeneous sequence lengths)
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(tokens), jnp.asarray(self.pos)
+        )
+        done = []
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, r in enumerate(self.live):
+            if r is None:
+                continue
+            r.out.append(int(nxt[i]))
+            self.pos[i] += 1
+            self.budget[i] -= 1
+            if self.budget[i] <= 0 or self.pos[i] >= self.cap - 1:
+                done.append(r)
+                self.live[i] = None
+        return done
+
+    @property
+    def n_live(self) -> int:
+        return sum(r is not None for r in self.live)
+
+
+class WorkStealingFrontend:
+    """N engine replicas fed by WS-WMULT queues; idle replicas steal."""
+
+    def __init__(self, make_batcher, n_replicas: int = 2, steal: bool = True):
+        self.queues = [WSWMult(storage="linked", node_len=32) for _ in range(n_replicas)]
+        self.batchers = [make_batcher() for _ in range(n_replicas)]
+        self.steal = steal
+        self.completed: Dict[int, Request] = {}
+        self.stats = {"admitted": 0, "stolen": 0, "dup_completed": 0}
+        self._lock = threading.Lock()
+
+    def submit(self, replica: int, req: Request):
+        self.queues[replica].put(req)
+
+    def _next_request(self, replica: int) -> Optional[Request]:
+        req = self.queues[replica].take()
+        if req is not EMPTY:
+            return req
+        if self.steal:
+            for v in range(len(self.queues)):
+                if v == replica:
+                    continue
+                got = self.queues[v].steal(pid=1 + replica)
+                if got is not EMPTY:
+                    self.stats["stolen"] += 1
+                    return got
+        return None
+
+    def run(self, max_iters: int = 10_000) -> Dict[int, Request]:
+        """Drive all replicas round-robin until queues drain and slots empty."""
+        for _ in range(max_iters):
+            worked = False
+            for rep, b in enumerate(self.batchers):
+                while b.n_live < b.B:
+                    req = self._next_request(rep)
+                    if req is None:
+                        break
+                    # idempotent admission: a stolen duplicate re-runs prefill
+                    b.admit(Request(req.rid, req.tokens, req.max_new))
+                    self.stats["admitted"] += 1
+                    worked = True
+                if b.n_live:
+                    for r in b.step():
+                        with self._lock:
+                            if r.rid in self.completed:
+                                self.stats["dup_completed"] += 1  # weak mult.
+                            else:
+                                self.completed[r.rid] = r
+                    worked = True
+            # an iteration with no admission and no live slot means every
+            # queue answered EMPTY to take AND steal: fully drained.
+            if not worked:
+                break
+        return self.completed

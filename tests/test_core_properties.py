@@ -1,0 +1,279 @@
+"""Concurrency property tests: the paper's relaxations hold under adversarial
+interleavings (deterministic simulator) and under real threads.
+
+Checked properties (see repro.core.simulator):
+  P1 weak multiplicity  — no process extracts the same task twice
+                          (WS-MULT, WS-WMULT, B-WS-*; Defs 3.1/4.1).
+  P2 multiplicity       — same-task extractions pairwise concurrent
+                          (WS-MULT / B-WS-MULT only; Remark 3.2).
+  P3 at-least-once FIFO — no task older than the newest extracted one is lost.
+  P4 owner FIFO order   — the owner's takes respect put order.
+  P5 §7 separation      — idempotent FIFO lets one thief re-extract a task an
+                          unbounded number of times; the paper's algorithms
+                          cap each process at one extraction per task.
+"""
+
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ALGORITHMS, EMPTY, MULTIPLICITY_FAMILY, ThreadBackend
+from repro.core.simulator import (
+    check_no_lost_tasks_fifo,
+    check_no_process_duplicates,
+    check_owner_fifo,
+    check_pairwise_concurrent_duplicates,
+    extractions,
+    run_program,
+)
+
+# ---------------------------------------------------------------------------
+# Simulator-based randomized schedules
+# ---------------------------------------------------------------------------
+
+
+def _make_program(n_tasks, n_thieves, steals_per_thief, takes):
+    prog = {0: [("put", i) for i in range(1, n_tasks + 1)] + [("take", None)] * takes}
+    for t in range(1, n_thieves + 1):
+        prog[t] = [("steal", None)] * steals_per_thief
+    return prog
+
+
+schedules = st.lists(st.integers(min_value=0, max_value=3), min_size=0, max_size=400)
+
+
+@pytest.mark.parametrize("name", sorted(MULTIPLICITY_FAMILY))
+@settings(max_examples=12, deadline=None)
+@given(schedule=schedules)
+def test_multiplicity_family_random_schedules(name, schedule):
+    factory = ALGORITHMS[name]
+
+    def make(backend):
+        if name in ("ws-mult", "b-ws-mult"):
+            return factory(backend=backend, max_register="tree", capacity=64)
+        return factory(backend=backend)
+
+    prog = _make_program(n_tasks=8, n_thieves=3, steals_per_thief=5, takes=5)
+    records = run_program(make, prog, schedule)
+    check_no_process_duplicates(records)  # P1
+    check_no_lost_tasks_fifo(records)  # P3
+    check_owner_fifo(records)  # P4
+    if name in ("ws-mult", "b-ws-mult"):
+        check_pairwise_concurrent_duplicates(records)  # P2 (set-linearizability)
+
+
+@settings(max_examples=12, deadline=None)
+@given(schedule=schedules)
+def test_wsmult_atomic_maxreg_random_schedules(schedule):
+    def make(backend):
+        return ALGORITHMS["ws-mult"](backend=backend, max_register="atomic")
+
+    prog = _make_program(n_tasks=6, n_thieves=3, steals_per_thief=4, takes=4)
+    records = run_program(make, prog, schedule)
+    check_no_process_duplicates(records)
+    check_pairwise_concurrent_duplicates(records)
+    check_no_lost_tasks_fifo(records)
+
+
+@settings(max_examples=10, deadline=None)
+@given(schedule=schedules, order=st.sampled_from(["task_first", "bottom_first"]))
+def test_wswmult_put_order_fence_freedom(schedule, order):
+    """Line 2 of Put is brace-unordered: both physical write orders satisfy
+    the same properties under adversarial schedules (fence-freedom)."""
+
+    def make(backend):
+        return ALGORITHMS["ws-wmult"](backend=backend, put_order=order)
+
+    prog = _make_program(n_tasks=6, n_thieves=2, steals_per_thief=6, takes=3)
+    records = run_program(make, prog, schedule)
+    check_no_process_duplicates(records)
+    check_no_lost_tasks_fifo(records)
+
+
+@settings(max_examples=10, deadline=None)
+@given(schedule=schedules)
+def test_exact_ws_no_duplicates_at_all(schedule):
+    """§5 'removing multiplicity': every task extracted at most once overall."""
+
+    def make(backend):
+        return ALGORITHMS["exact-ws"](backend=backend)
+
+    prog = _make_program(n_tasks=8, n_thieves=3, steals_per_thief=5, takes=5)
+    records = run_program(make, prog, schedule)
+    got = [r.result for r in extractions(records)]
+    assert len(got) == len(set(got)), f"exact-ws duplicated a task: {sorted(got)}"
+
+
+@settings(max_examples=10, deadline=None)
+@given(schedule=schedules)
+def test_bounded_variant_steal_at_most_once(schedule):
+    """§5: in B-WS-*, a task is extracted by at most one Take and one Steal."""
+
+    def make(backend):
+        return ALGORITHMS["b-ws-wmult"](backend=backend)
+
+    prog = _make_program(n_tasks=8, n_thieves=3, steals_per_thief=5, takes=5)
+    records = run_program(make, prog, schedule)
+    by_task = {}
+    for r in extractions(records):
+        by_task.setdefault(r.result, []).append(r.kind)
+    for task, kinds in by_task.items():
+        assert kinds.count("steal") <= 1, f"task {task} stolen twice: {kinds}"
+        assert kinds.count("take") <= 1, f"task {task} taken twice: {kinds}"
+
+
+# ---------------------------------------------------------------------------
+# §7: idempotent ≠ multiplicity — the separation witness
+# ---------------------------------------------------------------------------
+
+
+def test_idempotent_fifo_unbounded_re_extraction():
+    """Reproduces the §7 execution: the owner's Take stalls between reading a
+    task and publishing head+1; a single thief steals the whole remaining
+    prefix; the owner's stale head write then rewinds the queue, so the next
+    round re-extracts the same tasks.  Task i ends up extracted Θ(i) times —
+    by the *same thief*, non-concurrently."""
+    from repro.core.baselines import IdempotentFIFO
+
+    z = 6
+    q = IdempotentFIFO()
+    for i in range(1, z + 1):
+        q.put(i)
+
+    thief_got = []
+    r = z
+    while r >= 1:
+        # owner's take, paused before line 5 (head := h+1):
+        h = q.head.read(0)
+        t = q.tail.read(0)
+        assert h != t
+        tasks = q.tasks_ref.read(0)
+        _owner_task = tasks.a[h % tasks.size]
+        # thief sequentially steals r tasks
+        for _ in range(r):
+            got = q.steal(1)
+            assert got is not EMPTY
+            thief_got.append(got)
+        # owner resumes: stale head write rewinds the head
+        q.head.write(h + 1, 0)
+        r -= 1
+
+    counts = {v: thief_got.count(v) for v in set(thief_got)}
+    # task i is stolen in every round while the head is rewound behind it:
+    # unbounded growth with z — the same thief extracted some task many times.
+    assert max(counts.values()) >= z - 1, counts
+    # and these re-extractions are NON-concurrent (sequential steals), which
+    # work-stealing with (weak) multiplicity forbids per process.
+
+
+def test_wswmult_same_adversary_is_bounded():
+    """The same adversarial owner-stall drill against WS-WMULT: the thief's
+    persistent local head makes re-extraction impossible (≤1 per process)."""
+    from repro.core import WSWMult
+
+    z = 6
+    q = WSWMult()
+    for i in range(1, z + 1):
+        q.put(i)
+
+    thief_got = []
+    r = z
+    while r >= 1:
+        # owner's take, paused between reading the task and writing Head:
+        head = max(q._local_head(0), q.Head.read(0))
+        if head <= q.tail:
+            _x = q.tasks.read(head, 0)
+            # thief steals as much as it can
+            for _ in range(r):
+                got = q.steal(1)
+                if got is not EMPTY:
+                    thief_got.append(got)
+            # owner resumes: writes a stale head — rewinds Head
+            q.Head.write(head + 1, 0)
+            q._head[0] = head + 1
+        r -= 1
+
+    counts = {v: thief_got.count(v) for v in set(thief_got)}
+    assert counts and max(counts.values()) == 1, (
+        f"WS-WMULT let a single thief re-extract a task: {counts}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Real-thread stress tests (GIL preemption provides the interleavings)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(MULTIPLICITY_FAMILY) + ["exact-ws"])
+@pytest.mark.parametrize("storage", ["infinite", "linked"])
+def test_thread_stress(name, storage):
+    import sys
+
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(1e-5)  # force frequent preemption
+    try:
+        n_tasks, n_thieves = 2000, 3
+        kw = {"storage": storage}
+        if storage == "linked":
+            kw["node_len"] = 64
+        if name in ("ws-mult", "b-ws-mult"):
+            kw.update(max_register="atomic")
+        q = ALGORITHMS[name](**kw)
+        results = {pid: [] for pid in range(n_thieves + 1)}
+        stop = threading.Event()
+
+        def owner():
+            for i in range(n_tasks):
+                q.put(i)
+                if i % 3 == 0:
+                    x = q.take()
+                    if x is not EMPTY:
+                        results[0].append(x)
+            while True:
+                x = q.take()
+                if x is EMPTY:
+                    break
+                results[0].append(x)
+            stop.set()
+
+        def thief(pid):
+            misses = 0
+            while misses < 3 or not stop.is_set():
+                x = q.steal(pid)
+                if x is EMPTY:
+                    misses += 1
+                else:
+                    results[pid].append(x)
+                    misses = 0
+                if stop.is_set() and misses >= 3:
+                    break
+
+        threads = [threading.Thread(target=owner)] + [
+            threading.Thread(target=thief, args=(pid,)) for pid in range(1, n_thieves + 1)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(60)
+
+        # P1: per-process no duplicates
+        for pid, got in results.items():
+            assert len(got) == len(set(got)), f"{name}: process {pid} extracted a task twice"
+        # P3: every task extracted at least once (collectively)
+        union = set()
+        for got in results.values():
+            union.update(got)
+        assert union == set(range(n_tasks)), (
+            f"{name}: lost tasks {sorted(set(range(n_tasks)) - union)[:10]}..."
+        )
+        # multiplicity is bounded by the number of processes
+        all_got = [x for got in results.values() for x in got]
+        counts = {}
+        for x in all_got:
+            counts[x] = counts.get(x, 0) + 1
+        assert max(counts.values()) <= n_thieves + 1
+        if name == "exact-ws":
+            assert max(counts.values()) == 1
+    finally:
+        sys.setswitchinterval(old)

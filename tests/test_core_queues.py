@@ -1,0 +1,183 @@
+"""Unit tests: sequential behaviour of every queue + MaxRegister objects."""
+
+import pytest
+
+from repro.core import (
+    ALGORITHMS,
+    EMPTY,
+    AtomicMaxRegister,
+    RangeMaxRegister,
+    ThreadBackend,
+    TreeMaxRegister,
+)
+from repro.core.simulator import ExactFIFOOracle, ExactLIFOOracle, run_sequential
+
+FIFO_ALGOS = ["ws-mult", "ws-wmult", "b-ws-mult", "b-ws-wmult", "exact-ws", "idempotent-fifo"]
+DEQUE_ALGOS = ["chase-lev", "the-cilk", "idempotent-deque"]
+LIFO_ALGOS = ["idempotent-lifo"]
+
+
+def _oracle_for(name):
+    if name in FIFO_ALGOS:
+        return ExactFIFOOracle()
+    if name in LIFO_ALGOS:
+        return ExactLIFOOracle(steal_end="tail")
+    return ExactLIFOOracle(steal_end="head")
+
+
+SEQ_PROGRAMS = [
+    # (pid, kind, arg) sequences exercising put/take/steal/empty transitions
+    [(0, "put", 1), (0, "put", 2), (0, "take", None), (1, "steal", None),
+     (0, "take", None), (1, "steal", None)],
+    [(0, "take", None), (1, "steal", None), (0, "put", 1), (1, "steal", None),
+     (1, "steal", None), (0, "take", None)],
+    [(0, "put", i) for i in range(1, 9)]
+    + [(0, "take", None)] * 3 + [(1, "steal", None)] * 3 + [(2, "steal", None)] * 4,
+    [(0, "put", 1), (0, "take", None), (0, "put", 2), (0, "put", 3),
+     (1, "steal", None), (0, "take", None), (2, "steal", None), (2, "steal", None)],
+]
+
+
+@pytest.mark.parametrize("name", sorted(ALGORITHMS))
+@pytest.mark.parametrize("prog_i", range(len(SEQ_PROGRAMS)))
+def test_sequentially_exact(name, prog_i):
+    """Every algorithm behaves exactly (no relaxation) in sequential executions.
+
+    This is Remark 3.1 / the sequentially-exact requirement of §4 for the
+    paper's algorithms, and plain correctness for the baselines.
+    """
+    prog = SEQ_PROGRAMS[prog_i]
+    q = ALGORITHMS[name]()
+    oracle = _oracle_for(name)
+    got = run_sequential(q, prog)
+    want = run_sequential(oracle, prog)
+    assert [g[3] for g in got] == [w[3] for w in want], f"{name} diverges from oracle"
+
+
+@pytest.mark.parametrize("name", sorted(ALGORITHMS))
+def test_drain_everything(name):
+    q = ALGORITHMS[name]()
+    for i in range(100):
+        q.put(i)
+    got = []
+    while True:
+        x = q.take()
+        if x is EMPTY:
+            break
+        got.append(x)
+    assert sorted(got) == list(range(100))
+    assert q.take() is EMPTY
+    assert q.steal(1) is EMPTY
+
+
+@pytest.mark.parametrize("name", ["ws-mult", "ws-wmult", "b-ws-wmult"])
+@pytest.mark.parametrize("storage", ["infinite", "growable", "linked"])
+def test_storage_schemes(name, storage):
+    """§6: the finite-array schemes are drop-in replacements."""
+    kw = {"storage": storage}
+    if storage in ("growable",):
+        kw["initial_len"] = 8
+    if storage == "linked":
+        kw["node_len"] = 8
+    q = ALGORITHMS[name](**kw)
+    for i in range(1000):  # forces several expansions / node links
+        q.put(i)
+    out = []
+    for _ in range(500):
+        out.append(q.take())
+    for i in range(1000, 1500):
+        q.put(i)
+    while True:
+        x = q.steal(1)
+        if x is EMPTY:
+            break
+        out.append(x)
+    assert [x for x in out if x is not EMPTY] == list(range(1500))
+
+
+def test_tree_max_register_monotone():
+    m = TreeMaxRegister(capacity=64)
+    assert m.max_read() == 0
+    for v, want in [(5, 5), (3, 5), (17, 17), (16, 17), (63, 63), (2, 63)]:
+        m.max_write(v)
+        assert m.max_read() == want
+
+
+def test_tree_max_register_capacity_pow2_rounding():
+    m = TreeMaxRegister(capacity=100)
+    assert m.capacity == 128
+    m.max_write(99)
+    assert m.max_read() == 99
+    with pytest.raises(ValueError):
+        m.max_write(128)
+
+
+def test_tree_max_register_sweep_against_running_max():
+    import random
+
+    rng = random.Random(0)
+    m = TreeMaxRegister(capacity=1024)
+    cur = 0
+    for _ in range(500):
+        v = rng.randrange(1024)
+        m.max_write(v)
+        cur = max(cur, v)
+        assert m.max_read() == cur
+
+
+def test_atomic_max_register():
+    m = AtomicMaxRegister(init=1)
+    m.max_write(10)
+    m.max_write(4)
+    assert m.max_read() == 10
+
+
+def test_range_max_register_sequential_is_exact():
+    """Theorem 4.4: in sequential executions the RangeMaxRegister behaves as a
+    MaxRegister."""
+    r = RangeMaxRegister(init=1)
+    cur = 1
+    import random
+
+    rng = random.Random(1)
+    for _ in range(200):
+        pid = rng.randrange(4)
+        if rng.random() < 0.5:
+            v = rng.randrange(1, 100)
+            r.rmax_write(v, pid)
+            cur = max(cur, v)
+        else:
+            assert r.rmax_read(pid) == cur
+
+
+def test_range_max_register_range_property():
+    """RMaxRead returns a value in [local lower bound, true max]."""
+    r = RangeMaxRegister(init=1)
+    r.rmax_write(10, pid=0)
+    # pid 1 has never seen anything: its read must be in [1, 10]
+    got = r.rmax_read(pid=1)
+    assert 1 <= got <= 10
+    # after reading, its lower bound has risen
+    assert r.rmax_read(pid=1) >= got
+
+
+def test_wsmult_uninitialized_read_guard():
+    """The paper's two-slot-⊥ invariant: thieves never read UNINIT memory."""
+    from repro.core import UNINIT, WSMult
+
+    q = WSMult(max_register="atomic")
+    q.put("a")
+    assert q.steal(1) == "a"
+    # Head is now 2; slots 2 and 3 were initialized ⊥ by init+put.
+    assert q.steal(1) is EMPTY
+    assert q.steal(2) is EMPTY
+
+
+def test_put_order_irrelevant():
+    """Line 2's brace notation: both write orders behave identically."""
+    for order in ("task_first", "bottom_first"):
+        q = ALGORITHMS["ws-wmult"](put_order=order)
+        for i in range(10):
+            q.put(i)
+        got = [q.take() for _ in range(10)]
+        assert got == list(range(10))

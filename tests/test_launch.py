@@ -1,0 +1,193 @@
+"""Launch-layer tests: train loop, WS-gradient exactness, resume, dry-run
+smoke (subprocess with forced host devices), HLO analysis."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.hlo_analysis import analyze
+from repro.launch.steps import make_optimizer, make_train_step, train_policy
+from repro.models import init_params
+from repro.sched import MODES
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+
+
+# ---------------------------------------------------------------------------
+# work-stealing gradient EXACTNESS: every scheduler mode must produce the
+# same updated parameters as the plain full-batch step (the 1/count
+# multiplicity correction makes the relaxation exact for SGD).
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_ws_modes_match_plain_step(mode):
+    cfg = get_config("llama3.2-3b", smoke=True)
+    opt = make_optimizer(cfg, total_steps=10)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    state = {"params": params, "opt": opt.init(params)}
+
+    n_tasks, rows, seq, n_workers = 8, 2, 16, 4
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (n_tasks, rows, seq), 0, cfg.vocab_size)
+    tails = jnp.array([5, 1, 1, 1], jnp.int32)  # skewed queues
+
+    plain_step = jax.jit(make_train_step(cfg, opt))
+    plain_state, plain_metrics = plain_step(
+        state, {"tokens": tokens.reshape(n_tasks * rows, seq)}
+    )
+
+    ws_step = jax.jit(make_train_step(cfg, opt, ws_mode=mode, n_workers=n_workers))
+    ws_state, ws_metrics = ws_step(state, {"tokens": tokens, "tails": tails})
+
+    assert float(ws_metrics.get("ws_coverage", 1.0)) == 1.0  # at-least-once
+    np.testing.assert_allclose(
+        float(ws_metrics["loss"]), float(plain_metrics["loss"]), rtol=2e-5
+    )
+    for a, b in zip(
+        jax.tree_util.tree_leaves(ws_state["params"]),
+        jax.tree_util.tree_leaves(plain_state["params"]),
+    ):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-4, atol=3e-5)
+
+
+def test_train_loss_decreases(tmp_path):
+    from repro.launch.train import train
+
+    _, losses = train(
+        "llama3.2-3b", smoke=True, steps=30, rows=4, seq=32, lr=5e-3,
+        ckpt_dir=str(tmp_path / "ck"), ckpt_every=10, log_every=50,
+    )
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_train_resume_continues(tmp_path):
+    from repro.checkpoint import latest_step
+    from repro.launch.train import train
+
+    d = str(tmp_path / "ck")
+    train("llama3.2-3b", smoke=True, steps=11, rows=2, seq=16, ckpt_dir=d, ckpt_every=5, log_every=50)
+    s0 = latest_step(d)
+    assert s0 == 10
+    _, losses = train(
+        "llama3.2-3b", smoke=True, steps=16, rows=2, seq=16, ckpt_dir=d,
+        ckpt_every=5, resume=True, log_every=50,
+    )
+    assert latest_step(d) == 15
+    assert len(losses) == 5  # only steps 11..15 ran
+
+
+def test_train_policy_tiers():
+    assert train_policy(get_config("llama3.2-3b"))["fsdp"] is False
+    assert train_policy(get_config("gemma3-12b"))["fsdp"] is True
+    pol = train_policy(get_config("kimi-k2-1t-a32b"))
+    assert pol["fsdp"] == "pods" and pol["optimizer"] == "adafactor_momentum"
+
+
+# ---------------------------------------------------------------------------
+# dry-run smoke: the real dryrun.py code path on 8 forced host devices,
+# one arch per step-kind family.
+
+
+@pytest.mark.parametrize(
+    "arch,shape",
+    [
+        ("llama3.2-3b", "train_4k"),
+        ("deepseek-v2-236b", "decode_32k"),
+        ("mamba2-2.7b", "prefill_32k"),
+        ("zamba2-2.7b", "long_500k"),
+        ("whisper-base", "train_4k"),
+    ],
+)
+def test_dryrun_smoke_subprocess(arch, shape, tmp_path):
+    out = str(tmp_path / "rec.jsonl")
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--smoke", "--out", out],
+        env=ENV, capture_output=True, text=True, timeout=600, cwd=ROOT,
+    )
+    assert p.returncode == 0, p.stderr[-3000:]
+    rec = json.loads(open(out).read().strip())
+    assert rec["plan"] == "run"
+    assert rec["compile_s"] > 0
+    assert rec["hlo_flops_per_device"] > 0
+    assert rec["bottleneck"] in ("compute_s", "memory_s", "collective_s")
+
+
+def test_dryrun_smoke_multipod(tmp_path):
+    out = str(tmp_path / "rec.jsonl")
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "llama3.2-3b",
+         "--shape", "train_4k", "--smoke", "--multi-pod", "--out", out],
+        env=ENV, capture_output=True, text=True, timeout=600, cwd=ROOT,
+    )
+    assert p.returncode == 0, p.stderr[-3000:]
+    rec = json.loads(open(out).read().strip())
+    assert rec["mesh"] == "2x2x2" and rec["plan"] == "run"
+
+
+# ---------------------------------------------------------------------------
+# HLO analysis unit tests (crafted fixture: while loop with trip count 5)
+
+_FIXTURE = """
+HloModule test, entry_computation_layout={()->f32[8,16]{1,0}}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %trip = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %trip), direction=LT
+}
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[8,16]{1,0} all-reduce(%x), replica_groups={}, to_apply=%sum
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%ip, %ar)
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main () -> f32[8,16] {
+  %init = f32[8,16]{1,0} constant(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[8,16]{1,0}) tuple(%zero, %init)
+  %w = (s32[], f32[8,16]{1,0}) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_analysis_trip_counts():
+    res = analyze(_FIXTURE)
+    ar = res["per_kind"]["all-reduce"]
+    assert ar["count"] == 5  # 1 op x trip 5
+    assert ar["bytes"] == 5 * 8 * 16 * 4
+    assert res["collective_bytes"] == ar["bytes"]
+
+
+def test_hlo_analysis_dot_flops():
+    hlo = """
+HloModule t, entry_computation_layout={()->f32[4,6]{1,0}}
+
+ENTRY %main () -> f32[4,6] {
+  %a = f32[4,8]{1,0} constant(0)
+  %b = f32[8,6]{1,0} constant(0)
+  ROOT %d = f32[4,6]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    res = analyze(hlo)
+    assert res["flops"] == 2 * 4 * 6 * 8

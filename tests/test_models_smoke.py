@@ -1,0 +1,190 @@
+"""Per-architecture smoke tests (reduced configs, CPU, one real device).
+
+For every assigned arch: (1) forward + grad of the training loss on a tiny
+batch — shapes and finiteness; (2) prefill -> step-by-step decode must
+reproduce the last-token logits of a longer prefill (validates KV/SSM cache
+updates, RoPE offsets, window masks and the MLA absorbed-decode identity).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, cell_plan, get_config
+from repro.models import (
+    Caches,
+    decode_step,
+    init_caches,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+B, S = 2, 16
+
+
+def _batch(cfg, key, seq=S):
+    ks = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(ks[0], (B, seq), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(ks[1], (B, cfg.n_patches, cfg.d_model)) * 0.02
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(ks[2], (B, cfg.enc_seq_len, cfg.d_model)) * 0.02
+    return batch
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_forward_and_grad(arch, rng):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(rng, cfg)
+    batch = _batch(cfg, jax.random.fold_in(rng, 1))
+
+    def scalar_loss(p):
+        loss, metrics = loss_fn(p, cfg, batch)
+        return loss, metrics
+
+    (loss, metrics), grads = jax.jit(jax.value_and_grad(scalar_loss, has_aux=True))(params)
+    assert np.isfinite(float(loss)), (arch, float(loss))
+    assert float(loss) > 0
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(l))) for l in leaves), arch
+    # at least one nonzero grad leaf
+    assert any(float(jnp.abs(l).max()) > 0 for l in leaves), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_equivalence(arch, rng):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(jax.random.fold_in(rng, 2), cfg)
+    batch = _batch(cfg, jax.random.fold_in(rng, 3))
+    tokens = batch["tokens"]
+    T0 = S // 2
+    offset = cfg.n_patches if cfg.family == "vlm" else 0
+    cap = S + offset
+
+    def sub(b, t):
+        out = dict(b)
+        out["tokens"] = b["tokens"][:, :t]
+        return out
+
+    logits_full, _ = jax.jit(lambda p, b: prefill(p, cfg, b, capacity=cap))(params, batch)
+
+    _, caches = jax.jit(lambda p, b: prefill(p, cfg, b, capacity=cap))(
+        params, sub(batch, T0)
+    )
+    dec = jax.jit(
+        lambda p, c, t, pos: decode_step(params, cfg, c, t, pos),
+        static_argnums=(),
+    )
+    logits = None
+    for i in range(T0, S):
+        logits, caches = decode_step(
+            params, cfg, caches, tokens[:, i : i + 1], jnp.int32(offset + i)
+        )
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(logits_full), rtol=2e-3, atol=2e-3
+    )
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_init_caches_shapes(arch, rng):
+    cfg = get_config(arch, smoke=True)
+    caches = init_caches(cfg, batch=B, capacity=S)
+    assert isinstance(caches, Caches)
+    leaves = jax.tree_util.tree_leaves(caches)
+    assert leaves, arch
+    for l in leaves:
+        assert np.all(np.isfinite(np.asarray(l, dtype=np.float32)))
+
+
+def test_cell_plan_rules():
+    assert cell_plan(get_config("llama3.2-3b"))["long_500k"].startswith("skip")
+    assert cell_plan(get_config("mamba2-2.7b"))["long_500k"] == "run"
+    assert cell_plan(get_config("h2o-danube-1.8b"))["long_500k"] == "run"
+    assert cell_plan(get_config("gemma3-12b"))["long_500k"] == "run"
+    assert cell_plan(get_config("whisper-base"))["decode_32k"].startswith("skip")
+    plan = cell_plan(get_config("deepseek-v2-236b"))
+    assert plan["train_4k"] == "run" and plan["prefill_32k"] == "run"
+
+
+def test_param_counts_match_scale():
+    # analytic param_count should be in the right ballpark for the big archs
+    import math
+
+    expect = {
+        "llama3.2-3b": (2.5e9, 4.5e9),
+        "deepseek-v2-236b": (1.8e8 * 1000, 2.8e8 * 1000),  # 180-280B
+        "kimi-k2-1t-a32b": (0.8e12, 1.3e12),
+        "mamba2-2.7b": (2.0e9, 3.4e9),
+        "zamba2-2.7b": (2.0e9, 3.4e9),
+        "gemma3-12b": (9e9, 15e9),
+        "pixtral-12b": (9e9, 15e9),
+        "minicpm-2b": (1.8e9, 3.2e9),
+        "h2o-danube-1.8b": (1.4e9, 2.4e9),
+        "whisper-base": (5e7, 1.5e8),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, f"{n:.3e}", lo, hi)
+
+
+def test_pad_heads_exact_equivalence(rng):
+    """Zero-padded attention heads must be forward- AND gradient-equivalent.
+
+    Padding is applied by reusing the unpadded weights inside the padded
+    allocation (group-major for GQA), so logits and grads must match the
+    unpadded model exactly (§Perf hillclimb #1 safety proof).
+    """
+    cfg = get_config("llama3.2-3b", smoke=True)  # 4H/2kv, G=2
+    cfg_p = cfg.replace(pad_heads=True)
+    # force a padding situation: pretend mesh multiple is irrelevant; eff
+    # pads only when % 16 != 0 — smoke 4H pads to 16.
+    assert cfg_p.eff_heads[0] > cfg.n_heads
+
+    params = init_params(rng, cfg)
+    params_p = init_params(rng, cfg_p)
+    # graft the real weights into the padded allocation (group-major):
+    # wq/wo head axis is dim 1 / dim 0 resp.; wk/wv head axis is dim 1.
+    H, Hkv, G = cfg.n_heads, cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    Hp, Hkvp = cfg_p.eff_heads
+    Gp = Hp // Hkvp
+    la, lp = params["layers"]["attn"], params_p["layers"]["attn"]
+    wq = np.zeros(lp["wq"].shape, np.float32)
+    wo = np.zeros(lp["wo"].shape, np.float32)
+    for kv in range(Hkv):
+        for g in range(G):
+            wq[:, :, kv * Gp + g, :] = np.asarray(la["wq"])[:, :, kv * G + g, :]
+            wo[:, kv * Gp + g, :, :] = np.asarray(la["wo"])[:, kv * G + g, :, :]
+    wk = np.zeros(lp["wk"].shape, np.float32)
+    wv = np.zeros(lp["wv"].shape, np.float32)
+    wk[:, :, :Hkv, :] = np.asarray(la["wk"])
+    wv[:, :, :Hkv, :] = np.asarray(la["wv"])
+    params_p["layers"]["attn"] = {
+        "wq": jnp.asarray(wq), "wk": jnp.asarray(wk),
+        "wv": jnp.asarray(wv), "wo": jnp.asarray(wo),
+    }
+    for k in ("embed", "unembed", "final_norm"):
+        params_p[k] = params[k]
+    params_p["layers"]["attn_norm"] = params["layers"]["attn_norm"]
+    params_p["layers"]["mlp_norm"] = params["layers"]["mlp_norm"]
+    params_p["layers"]["mlp"] = params["layers"]["mlp"]
+
+    batch = _batch(cfg, jax.random.fold_in(rng, 9))
+    (l0, _), g0 = jax.value_and_grad(lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+    (l1, _), g1 = jax.value_and_grad(lambda p: loss_fn(p, cfg_p, batch), has_aux=True)(params_p)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+    # mlp grads identical; padded attention slices must have ZERO grads
+    np.testing.assert_allclose(
+        np.asarray(g0["layers"]["mlp"]["wg"]), np.asarray(g1["layers"]["mlp"]["wg"]),
+        rtol=1e-4, atol=1e-6,
+    )
+    gq = np.asarray(g1["layers"]["attn"]["wq"])
+    pad_heads_idx = [kv * Gp + g for kv in range(Hkvp) for g in range(Gp)
+                     if not (g < G and kv < Hkv)]
+    assert np.abs(gq[:, :, pad_heads_idx, :]).max() < 1e-6
