@@ -5,6 +5,7 @@ Sections:
   [zero-cost]      paper Fig 9a/9b — put-take / put-steal µs/op + instr mix
   [spanning-tree]  paper Table 1 / Figs 10-14 — speedups per graph x algo
   [scheduler]      L1 TPU adaptation — lockstep rounds + async makespan
+  [ragged]         device-resident WS tile scheduler vs static grid (pallas_ws)
   [loader]         L2 host pipeline — work-stealing loader throughput
   [roofline]       dry-run roofline table (if results/dryrun.jsonl exists)
 
@@ -21,7 +22,9 @@ import time
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--sections", default="zero-cost,spanning-tree,scheduler,loader,roofline")
+    ap.add_argument(
+        "--sections", default="zero-cost,spanning-tree,scheduler,ragged,loader,roofline"
+    )
     args = ap.parse_args(argv)
     sections = set(args.sections.split(","))
     t0 = time.time()
@@ -43,6 +46,15 @@ def main(argv=None):
         from . import scheduler
 
         scheduler.main()
+
+    status = 0
+    if "ragged" in sections:
+        print("\n== [ragged] device-resident WS tile scheduler vs static grid ==")
+        from . import ragged_attention
+
+        # nonzero when ws fails to beat static at skew >= 4 — the bench's
+        # regression signal must survive the suite entry point
+        status |= ragged_attention.main(["--dry-run"] if args.quick else [])
 
     if "loader" in sections:
         print("\n== [loader] L2 work-stealing data loader ==")
@@ -75,7 +87,7 @@ def main(argv=None):
         roofline.main()
 
     print(f"\n[benchmarks] done in {time.time() - t0:.1f}s")
-    return 0
+    return status
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ from .instrument import CountingBackend
 DEFAULT_ALGOS = (
     "ws-wmult",
     "ws-wmult-array",
+    "pallas-ws",
     "b-ws-wmult",
     "ws-mult",
     "b-ws-mult",
@@ -48,6 +49,9 @@ def _make(name: str, backend=None, n_ops: int = 0):
             kw["node_len"] = 4096
         else:
             kw["initial_len"] = 4096
+    elif base == "pallas-ws":
+        # fixed-capacity device layout: size for the whole run
+        kw = dict(capacity=n_ops + 8)
     else:
         kw = dict(initial_len=4096)
     return ALGORITHMS[base](backend=backend, **kw) if backend else ALGORITHMS[base](**kw)

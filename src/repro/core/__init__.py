@@ -23,10 +23,20 @@ from .storage import GrowableStore, InfiniteStore, LinkedStore, make_store
 from .ws_mult import WSMult
 from .ws_wmult import WSWMult
 
+
+def _pallas_ws_host(backend=None, **kw):
+    """Lazy factory for the device-layout shim (avoids importing jax-adjacent
+    modules when only the pure shared-memory algorithms are needed)."""
+    from repro.pallas_ws.host import PallasWSHost
+
+    return PallasWSHost(backend=backend, **kw)
+
+
 # Registry used by tests / benchmarks.  Each factory takes (backend=None, **kw).
 ALGORITHMS = {
     "ws-mult": WSMult,
     "ws-wmult": WSWMult,
+    "pallas-ws": _pallas_ws_host,
     "b-ws-mult": BWSMult,
     "b-ws-wmult": BWSWMult,
     "exact-ws": ExactWS,
@@ -38,8 +48,9 @@ ALGORITHMS = {
 }
 
 # Algorithms whose relaxation guarantees each *process* extracts a task at
-# most once (the paper's multiplicity family).
-MULTIPLICITY_FAMILY = ("ws-mult", "ws-wmult", "b-ws-mult", "b-ws-wmult")
+# most once (the paper's multiplicity family).  "pallas-ws" is the device
+# queue layout's host shim — same WS-WMULT protocol, so same guarantees.
+MULTIPLICITY_FAMILY = ("ws-mult", "ws-wmult", "b-ws-mult", "b-ws-wmult", "pallas-ws")
 # Exactly-once algorithms (ground truth).
 EXACT_FAMILY = ("exact-ws", "chase-lev", "the-cilk")
 # At-least-once with unbounded duplicates (idempotent relaxation).

@@ -1,0 +1,10 @@
+"""jax version compatibility for the Pallas kernels.
+
+jax renamed ``pltpu.TPUCompilerParams`` (<= 0.5.x) to
+``pltpu.CompilerParams``; accept both so the kernels run on the container's
+jax as well as current releases.
+"""
+
+from jax.experimental.pallas import tpu as _pltpu
+
+compiler_params = getattr(_pltpu, "CompilerParams", None) or _pltpu.TPUCompilerParams

@@ -94,3 +94,23 @@ def _bwd(causal, window, bq, bk, interpret, res, do):
 
 
 flash_attention.defvjp(_fwd, _bwd)
+
+
+def ragged_flash_attention(
+    q, k, v, lengths, *, causal=True, schedule="ws", n_programs=8,
+    bq=32, bk=32, interpret=True, return_stats=False,
+):
+    """Ragged (variable-length) flash attention.
+
+    ``schedule="ws"`` routes the imbalanced tile tasks through the
+    device-resident fence-free work-stealing scheduler
+    (:mod:`repro.pallas_ws`); ``schedule="static"`` drains the same queues
+    without stealing — the static-grid baseline with identical numerics.
+    """
+    from repro.pallas_ws.ragged import ragged_flash_attention as _impl
+
+    return _impl(
+        q, k, v, lengths, causal=causal, schedule=schedule,
+        n_programs=n_programs, bq=bq, bk=bk, interpret=interpret,
+        return_stats=return_stats,
+    )

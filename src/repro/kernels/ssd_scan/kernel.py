@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import compiler_params as _compiler_params
+
 
 def _ssd_kernel(
     x_ref, dt_ref, A_ref, B_ref, C_ref,  # inputs
@@ -116,7 +118,7 @@ def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = False):
             jax.ShapeDtypeStruct((b, H, P, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -213,6 +213,8 @@ def run_cell(
     # undercount); keep it as reference, use the trip-aware HLO walk as
     # the roofline numerator.
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per computation
+        ca = ca[0] if ca else {}
     rec["xla_cost_flops"] = float(ca.get("flops", 0.0))
     rec["xla_cost_bytes"] = float(ca.get("bytes accessed", 0.0))
     res = analyze(compiled.as_text())

@@ -1,0 +1,53 @@
+"""repro.pallas_ws — device-resident fence-free work-stealing tile scheduler.
+
+The on-device realization of the paper's WS-WMULT (Fig. 7): per-program task
+queues laid out as HBM arrays (:mod:`queues`), a persistent-grid Pallas
+megakernel whose programs Take from their own queue and Steal from stale
+victim head views with plain loads/stores only (:mod:`kernel`), idempotent
+tile tasks with a multiplicity counter that count-normalizes duplicated work
+(:mod:`tasks`), ragged flash/decode attention front-ends (:mod:`ragged`),
+and a host shim exercising the same layout under the repro.core property
+harness (:mod:`host`).  See DESIGN.md §3.
+
+Attribute access is lazy (PEP 562) so jax-free consumers — the
+``pallas-ws`` entry in ``repro.core.ALGORITHMS`` only needs :mod:`host`,
+which is pure Python — never pay the jax import.
+"""
+
+_EXPORTS = {
+    "PallasWSHost": "host",
+    "WSRunResult": "kernel",
+    "default_rounds": "kernel",
+    "run_ws_schedule": "kernel",
+    "QueueState": "queues",
+    "make_queue_state": "queues",
+    "partition_tasks": "queues",
+    "queue_costs": "queues",
+    "RaggedStats": "ragged",
+    "ragged_attention_ref": "ragged",
+    "ragged_decode_attention": "ragged",
+    "ragged_decode_ref": "ragged",
+    "ragged_flash_attention": "ragged",
+    "BOTTOM": "tasks",
+    "TASK_WIDTH": "tasks",
+    "TileTask": "tasks",
+    "emit_decode_tasks": "tasks",
+    "emit_flash_tasks": "tasks",
+    "multiplicity_divisor": "tasks",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+
+    return getattr(importlib.import_module(f".{module}", __name__), name)
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,93 @@
+"""Host-side shim: the device queue layout driven through the repro.core API.
+
+``PallasWSHost`` is WS-WMULT (paper Fig. 7) implemented against the *exact*
+array layout the megakernel uses — an indexed ``tasks`` array with ⊥
+sentinels, a plain shared ``head`` register, per-process persistent local
+bounds, and a ``taken`` announcement row — but built on
+:mod:`repro.core.backend` cells, so it runs under ``ThreadBackend`` (real
+threads) and ``SimBackend`` (deterministic adversarial interleavings) like
+every other algorithm in ``repro.core.ALGORITHMS`` (registered as
+``"pallas-ws"``).
+
+This is the bridge that lets the paper-level property checkers certify the
+device layout: the same slot arithmetic the kernel performs per grid cell is
+performed here one shared-memory step at a time, where the simulator can
+split it adversarially.  Differences from :class:`repro.core.ws_wmult.WSWMult`
+are purely representational: 0-based indexing (device arrays), a fixed
+capacity (device allocation), and the announcement row (device diagnostics).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from repro.core.backend import BOTTOM, EMPTY, ThreadBackend
+
+
+class PallasWSHost:
+    """Fence-free Read/Write work-stealing on the pallas_ws array layout."""
+
+    OWNER = 0
+
+    def __init__(self, backend=None, capacity: int = 4096, **_ignored: Any):
+        backend = backend if backend is not None else ThreadBackend()
+        self.backend = backend
+        self.capacity = capacity
+        # Device mirror: tasks[s] (⊥-initialized suffix), head, taken row.
+        self.tasks = backend.array(capacity, init=BOTTOM)
+        self.Head = backend.cell(0)
+        self.taken = backend.map_cells(default=-1)  # (pid, slot) announcements
+        self.tail = 0  # owner-local, exactly as in Fig. 7
+        self._local: Dict[int, int] = {}  # per-process persistent head bound
+
+    def _local_head(self, pid: int) -> int:
+        return self._local.get(pid, 0)
+
+    # -- owner ----------------------------------------------------------
+    def put(self, x: Any) -> bool:
+        if self.tail + 1 >= self.capacity:
+            raise RuntimeError(f"pallas-ws queue full (capacity={self.capacity})")
+        pid = self.OWNER
+        self.tasks.write(self.tail, x, pid)  # line 2 (task slot)
+        if self.tail + 2 < self.capacity:
+            # pre-clear invariant: the two slots past tail read as ⊥, never
+            # uninitialized memory (already true at init; kept as the literal
+            # Fig. 7 write so instruction-count benchmarks stay faithful)
+            self.tasks.write(self.tail + 2, BOTTOM, pid)
+        self.tail += 1  # line 1 ordering is owner-local, no fence needed
+        return True
+
+    def take(self) -> Any:
+        pid = self.OWNER
+        head = max(self._local_head(pid), self.Head.read(pid))  # RMaxRead
+        if head < self.tail:  # line 5
+            x = self.tasks.read(head, pid)  # line 6
+            self.Head.write(head + 1, pid)  # plain write, read elided
+            self._local[pid] = head + 1
+            self.taken.write((pid, head), pid, pid)
+            return x
+        self._local[pid] = head
+        return EMPTY
+
+    # -- thieves ----------------------------------------------------------
+    def steal(self, pid: int) -> Any:
+        head = max(self._local_head(pid), self.Head.read(pid))  # line 11
+        if head >= self.capacity:
+            return EMPTY
+        x = self.tasks.read(head, pid)  # line 12
+        if x is not BOTTOM:  # line 13
+            self.Head.write(head + 1, pid)  # line 14 — plain write
+            self._local[pid] = head + 1  # line 15
+            self.taken.write((pid, head), pid, pid)
+            return x
+        self._local[pid] = head
+        return EMPTY
+
+    # -- diagnostics ------------------------------------------------------
+    def snapshot(self):
+        """(head, tail, taken-announcements) for layout parity checks."""
+        return (
+            self.Head.read(self.OWNER),
+            self.tail,
+            dict(self.taken.m),
+        )

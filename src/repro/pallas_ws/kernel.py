@@ -1,0 +1,308 @@
+"""Persistent-grid Pallas megakernel: fence-free work-stealing tile scheduler.
+
+One ``pallas_call`` runs the whole ragged-attention workload.  Grid is
+``(rounds, n_programs)`` with the program dim innermost, so the execution
+order is round-major: every program performs at most one Take/Steal per
+round, and a program whose current task costs ``c`` tile-slots stays busy
+(``clock[p] > r``) for the next ``c`` rounds.  This block-granular lockstep
+is the deterministic serialization of P persistent cores running the same
+loop in real time — the same modeling device as :mod:`repro.sched`'s
+lockstep rounds, now *inside* one kernel over HBM-resident queue arrays.
+
+The extraction protocol is WS-WMULT (paper Fig. 7) verbatim, on the
+:mod:`repro.pallas_ws.queues` layout:
+
+    h = max(local_head[p, v], head[v])          # inlined RMaxRead
+    if tasks[v, h, OP] != ⊥:                    # lines 12-13
+        head[v] = h + 1                         # plain write (RMaxWrite,
+        local_head[p, v] = h + 1                #  read elided)
+        taken[v, h] = p                         # announcement
+        execute tile; mult[tid] += 1            # idempotent-accumulate
+
+Plain loads and stores only — no CAS, no semaphore, no fence.  A stale
+``head`` write may rewind a queue and hand the same tile to two programs;
+the tile write is an *accumulate* and ``mult`` counts executions, so the
+caller divides the duplicates back out (see ``tasks.multiplicity_divisor``).
+Each program's ``local_head`` row is strictly increasing, so no program
+re-extracts a slot it already extracted — the paper's weak multiplicity,
+verified on-device by tests/test_pallas_ws.py.
+
+Interpret mode (`interpret=True`, the CI path) executes grid cells
+sequentially, which makes single-launch runs sequentially-exact (mult == 1
+everywhere) — duplicates are exercised by seeding adversarial
+``head``/``local_head`` snapshots, mirroring the §7 drills of the host
+tests.  On real TPU the queue arrays would sit in SMEM/VMEM and q/k/v tiles
+would be DMA'd from HBM per task; the protocol itself is memory-space
+agnostic.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .queues import QueueState, queue_costs
+from .tasks import (
+    BOTTOM,
+    F_B,
+    F_COST,
+    F_H,
+    F_KV,
+    F_OP,
+    F_QL,
+    F_QS,
+    F_TID,
+)
+
+NEG_INF = -1e30
+
+
+def _ws_kernel(
+    # aliased inputs (stale snapshots — state is read/written via the outputs)
+    head_i, local_head_i, taken_i, clock_i, work_i, steals_i, mult_i, out_i,
+    # pure inputs
+    tasks_ref, q_ref, k_ref, v_ref,
+    # live (aliased) outputs
+    head_ref, local_head_ref, taken_ref, clock_ref, work_ref, steals_ref,
+    mult_ref, out_ref,
+    *,
+    n_programs: int,
+    n_queues: int,
+    capacity: int,
+    bq: int,
+    bk: int,
+    causal: bool,
+    steal: bool,
+    scale: float,
+    g: int,
+):
+    r = pl.program_id(0)
+    p = pl.program_id(1)
+
+    # A program extracts only when its virtual clock has caught up with the
+    # round counter — i.e. it is idle in the modeled parallel execution.
+    idle = clock_ref[p] <= r
+
+    def scan_one(j, carry):
+        found, fq, fs = carry
+        v = jax.lax.rem(p + j, n_queues)
+        h = jnp.maximum(local_head_ref[p, v], head_ref[v])  # RMaxRead
+        hc = jnp.minimum(h, capacity - 1)
+        op = tasks_ref[v, hc, F_OP]
+        live = (h < capacity) & (op != BOTTOM)
+        claim = (~found) & live
+
+        @pl.when(claim)
+        def _claim():
+            head_ref[v] = h + 1            # plain write — no CAS
+            local_head_ref[p, v] = h + 1   # persistent local bound
+
+        return (found | live, jnp.where(claim, v, fq), jnp.where(claim, hc, fs))
+
+    n_scan = n_queues if steal else 1
+    zero = (jnp.bool_(False), jnp.int32(0), jnp.int32(0))
+    found, fq, fs = jax.lax.cond(
+        idle,
+        lambda: jax.lax.fori_loop(0, n_scan, scan_one, zero),
+        lambda: zero,
+    )
+
+    @pl.when(found)
+    def _execute():
+        b = tasks_ref[fq, fs, F_B]
+        h = tasks_ref[fq, fs, F_H]
+        qs = tasks_ref[fq, fs, F_QS]
+        ql = tasks_ref[fq, fs, F_QL]
+        kv_end = tasks_ref[fq, fs, F_KV]
+        tid = tasks_ref[fq, fs, F_TID]
+        cost = tasks_ref[fq, fs, F_COST]
+        kh = jax.lax.div(h, g)
+
+        qt = q_ref[pl.ds(b, 1), pl.ds(h, 1), pl.ds(qs, bq), :]
+        qt = qt.reshape(bq, q_ref.shape[-1]).astype(jnp.float32)
+
+        def kv_block(ki, mla):
+            m, l, acc = mla
+            kt = k_ref[pl.ds(b, 1), pl.ds(kh, 1), pl.ds(ki * bk, bk), :]
+            vt = v_ref[pl.ds(b, 1), pl.ds(kh, 1), pl.ds(ki * bk, bk), :]
+            kt = kt.reshape(bk, -1).astype(jnp.float32)
+            vt = vt.reshape(bk, -1).astype(jnp.float32)
+            s = jax.lax.dot_general(
+                qt, kt, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ) * scale  # [bq, bk]
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            valid = kpos < kv_end
+            if causal:
+                qpos = qs + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+                valid &= kpos <= qpos
+            s = jnp.where(valid, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=1))
+            pexp = jnp.exp(s - m_new[:, None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + pexp.sum(axis=1)
+            acc_new = acc * corr[:, None] + jax.lax.dot_general(
+                pexp, vt, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new)
+
+        hd = q_ref.shape[-1]
+        m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((bq,), jnp.float32)
+        a0 = jnp.zeros((bq, hd), jnp.float32)
+        # Dynamic trip count: a real persistent core sweeps only the live
+        # blocks — this is exactly the cost the work counters account.
+        m, l, acc = jax.lax.fori_loop(0, cost, kv_block, (m0, l0, a0))
+
+        tile = acc / jnp.maximum(l, 1e-30)[:, None]
+        row_live = jax.lax.broadcasted_iota(jnp.int32, (bq, hd), 0) < ql
+        tile = jnp.where(row_live, tile, 0.0)
+
+        # Idempotent-accumulate: duplicates add whole extra copies of the
+        # same tile, which mult[tid] normalizes out host-side.
+        cur = out_ref[pl.ds(b, 1), pl.ds(h, 1), pl.ds(qs, bq), :]
+        out_ref[pl.ds(b, 1), pl.ds(h, 1), pl.ds(qs, bq), :] = (
+            cur + tile[None, None]
+        )
+        mult_ref[tid] = mult_ref[tid] + 1
+        taken_ref[fq, fs] = p
+        work_ref[p] = work_ref[p] + cost
+        own = jax.lax.rem(p, n_queues)
+        steals_ref[p] = steals_ref[p] + jnp.where(fq != own, 1, 0)
+        clock_ref[p] = jnp.maximum(clock_ref[p], r) + cost
+
+
+@dataclass
+class WSRunResult:
+    out: jax.Array          # [B, H, Sq, hd] float32, mult-weighted accumulation
+    head: np.ndarray        # final shared heads            [n_queues]
+    local_head: np.ndarray  # final per-program bounds      [n_programs, n_queues]
+    taken: np.ndarray       # announcement rows             [n_queues, capacity]
+    clock: np.ndarray       # per-program completion time   [n_programs]
+    work: np.ndarray        # tile-slots executed           [n_programs]
+    steals: np.ndarray      # successful cross-queue grabs  [n_programs]
+    mult: np.ndarray        # per-task execution counts     [n_tasks]
+
+    @property
+    def makespan(self) -> int:
+        return int(self.clock.max()) if self.clock.size else 0
+
+    @property
+    def total_work(self) -> int:
+        return int(self.work.sum())
+
+    @property
+    def wasted_slots(self) -> int:
+        """Idle tile-slots: programs waiting while the slowest one finishes."""
+        return len(self.work) * self.makespan - self.total_work
+
+
+def default_rounds(state: QueueState, steal: bool) -> int:
+    """Static upper bound on rounds to drain every queue.
+
+    Stealing: Graham's greedy bound ``total/P + max_cost`` (no program idles
+    while any queue is non-empty).  Static: the heaviest queue runs alone.
+    """
+    costs = queue_costs(state)
+    total = int(costs.sum())
+    if total == 0:
+        return 1
+    from .tasks import max_cost
+
+    mc = max_cost(state.task_list) if state.task_list else int(costs.max())
+    if steal:
+        return -(-total // state.n_programs) + mc + state.n_queues + 8
+    return int(costs.max()) + 8
+
+
+def run_ws_schedule(
+    state: QueueState,
+    q,
+    k,
+    v,
+    *,
+    causal: bool,
+    bq: int,
+    bk: int,
+    steal: bool = True,
+    rounds: Optional[int] = None,
+    out: Optional[jax.Array] = None,
+    mult: Optional[jax.Array] = None,
+    interpret: bool = True,
+) -> WSRunResult:
+    """Launch the megakernel over a prepared :class:`QueueState`.
+
+    ``q``: [B, H, Sq, hd] with Sq a multiple of ``bq``; ``k``/``v``:
+    [B, Hkv, Sk, hd] with Sk a multiple of ``bk``.  ``out``/``mult`` may be
+    carried over from a previous launch (resume / multiplicity drills);
+    fresh zeros otherwise.
+    """
+    B, H, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    assert Sq % bq == 0, (Sq, bq)
+    assert Sk % bk == 0, (Sk, bk)
+    g = H // Hkv
+    P = state.n_programs
+    rounds = default_rounds(state, steal) if rounds is None else rounds
+
+    n_tasks = max(1, state.n_tasks)
+    out = jnp.zeros((B, H, Sq, hd), jnp.float32) if out is None else out
+    mult = jnp.zeros((n_tasks,), jnp.int32) if mult is None else mult
+    clock = jnp.zeros((P,), jnp.int32)
+    work = jnp.zeros((P,), jnp.int32)
+    steals = jnp.zeros((P,), jnp.int32)
+
+    kernel = functools.partial(
+        _ws_kernel,
+        n_programs=P,
+        n_queues=state.n_queues,
+        capacity=state.capacity,
+        bq=bq,
+        bk=bk,
+        causal=causal,
+        steal=steal,
+        scale=hd**-0.5,
+        g=g,
+    )
+
+    def full(a):
+        return pl.BlockSpec(a.shape, lambda r, p, nd=a.ndim: (0,) * nd)
+
+    mutable = [
+        jnp.asarray(state.head),
+        jnp.asarray(state.local_head),
+        jnp.asarray(state.taken),
+        clock,
+        work,
+        steals,
+        jnp.asarray(mult),
+        jnp.asarray(out),
+    ]
+    pure = [jnp.asarray(state.tasks), q, k, v]
+    outs = pl.pallas_call(
+        kernel,
+        grid=(rounds, P),
+        in_specs=[full(a) for a in mutable] + [full(a) for a in pure],
+        out_specs=[full(a) for a in mutable],
+        out_shape=[jax.ShapeDtypeStruct(a.shape, a.dtype) for a in mutable],
+        input_output_aliases={i: i for i in range(len(mutable))},
+        interpret=interpret,
+    )(*mutable, *pure)
+    head, local_head, taken, clock, work, steals, mult, out = outs
+    return WSRunResult(
+        out=out,
+        head=np.asarray(head),
+        local_head=np.asarray(local_head),
+        taken=np.asarray(taken),
+        clock=np.asarray(clock),
+        work=np.asarray(work),
+        steals=np.asarray(steals),
+        mult=np.asarray(mult),
+    )

@@ -1,0 +1,119 @@
+"""HBM-resident per-program task queues as flat int32 arrays (WS-WMULT Fig. 7).
+
+The paper's shared objects map onto device arrays one-to-one:
+
+==========================  =====================================================
+paper (Fig. 7)              device layout (all plain loads/stores)
+==========================  =====================================================
+``tasks[1..∞]`` per queue   ``tasks[q, s, :]``  [n_queues, capacity, TASK_WIDTH]
+``Head`` register           ``head[q]``         [n_queues]
+process-local ``head``      ``local_head[p, q]`` [n_programs, n_queues]
+(announcement)              ``taken[q, s]``     [n_queues, capacity] — extractor id
+``tail`` (owner-local)      ``tail[q]``         [n_queues] — static: puts happen
+                                                 host-side before launch
+==========================  =====================================================
+
+``local_head[p, q]`` is the persistent per-process lower bound of the inlined
+RangeMaxRegister: every Take/Steal refreshes it with ``max(local, head[q])``
+(the RMaxRead) and plainly writes ``head[q] = h+1`` on success (the RMaxWrite
+with its read elided).  No CAS, no fence — a stale ``head`` write can rewind a
+queue and cause re-extraction, but each program's bound is strictly
+increasing, so no *program* extracts the same slot twice.
+
+``taken[q, s]`` is the announcement row: the extracting program writes its id
+after claiming slot ``s``.  It is diagnostic (multiplicity accounting /
+drills), never consulted by the extraction protocol itself.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Sequence
+
+import numpy as np
+
+from .tasks import BOTTOM, TASK_WIDTH, TileTask
+
+
+@dataclass
+class QueueState:
+    """Host-side mirror of the device queue arrays (numpy int32)."""
+
+    tasks: np.ndarray        # [n_queues, capacity, TASK_WIDTH]
+    head: np.ndarray         # [n_queues]
+    tail: np.ndarray         # [n_queues]
+    local_head: np.ndarray   # [n_programs, n_queues]
+    taken: np.ndarray        # [n_queues, capacity], -1 = not extracted
+    task_list: List[TileTask] = field(default_factory=list)
+
+    @property
+    def n_queues(self) -> int:
+        return self.tasks.shape[0]
+
+    @property
+    def n_programs(self) -> int:
+        return self.local_head.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.tasks.shape[1]
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.task_list)
+
+
+def partition_tasks(
+    tasks: Sequence[TileTask], n_queues: int, partition: str = "batch"
+) -> List[List[TileTask]]:
+    """Assign tasks to owner queues.
+
+    * ``"batch"``     — queue ``b % n_queues``: all tiles of a sequence land on
+      one queue, the natural ragged-serving placement and the one that
+      produces the skew the thieves then erase.
+    * ``"round_robin"`` — task-index striping (near-balanced baseline).
+    """
+    buckets: List[List[TileTask]] = [[] for _ in range(n_queues)]
+    for i, t in enumerate(tasks):
+        q = (t.b if partition == "batch" else i) % n_queues
+        buckets[q].append(t)
+    return buckets
+
+
+def make_queue_state(
+    tasks: Sequence[TileTask],
+    n_programs: int,
+    n_queues: int | None = None,
+    partition: str = "batch",
+) -> QueueState:
+    """Lay tasks out in the Fig. 7 array format, ready for the megakernel.
+
+    Slots beyond each queue's tail keep ``BOTTOM`` in field 0 — the paper's
+    two-⊥-slot invariant degenerates to "the whole suffix is ⊥" because all
+    Puts happen host-side before the kernel launches.
+    """
+    n_queues = n_programs if n_queues is None else n_queues
+    buckets = partition_tasks(tasks, n_queues, partition)
+    cap = max(4, max((len(b) for b in buckets), default=0) + 2)
+    arr = np.full((n_queues, cap, TASK_WIDTH), BOTTOM, dtype=np.int32)
+    tail = np.zeros((n_queues,), dtype=np.int32)
+    for q, bucket in enumerate(buckets):
+        for s, t in enumerate(bucket):
+            arr[q, s] = t.encode()
+        tail[q] = len(bucket)
+    return QueueState(
+        tasks=arr,
+        head=np.zeros((n_queues,), dtype=np.int32),
+        tail=tail,
+        local_head=np.zeros((n_programs, n_queues), dtype=np.int32),
+        taken=np.full((n_queues, cap), -1, dtype=np.int32),
+        task_list=list(tasks),
+    )
+
+
+def queue_costs(state: QueueState) -> np.ndarray:
+    """Total tile-slot cost enqueued per queue (the static-schedule load)."""
+    from .tasks import F_COST, F_OP
+
+    live = state.tasks[:, :, F_OP] != BOTTOM
+    return np.where(live, state.tasks[:, :, F_COST], 0).sum(axis=1)

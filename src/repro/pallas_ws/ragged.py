@@ -1,0 +1,207 @@
+"""Ragged attention front-ends for the work-stealing tile scheduler.
+
+Variable sequence lengths are where a static grid hemorrhages tile-slots:
+grid size is fixed by the *padded* length, so short sequences burn slots on
+dead tiles while the one long sequence serializes on a single core.  These
+front-ends emit only the live tiles (host-side, where lengths are concrete),
+lay them out in the Fig. 7 queue arrays partitioned by batch row — the
+natural serving placement, and the worst-case imbalance — and let the
+megakernel's thieves flatten the skew.
+
+``schedule="ws"`` steals; ``schedule="static"`` drains owner queues only
+(same kernel, same cost accounting — an apples-to-apples makespan baseline).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import WSRunResult, run_ws_schedule
+from .queues import make_queue_state, queue_costs
+from .tasks import (
+    emit_decode_tasks,
+    emit_flash_tasks,
+    multiplicity_divisor,
+)
+
+SCHEDULES = ("ws", "static")
+
+
+@dataclass
+class RaggedStats:
+    """Scheduling telemetry for one launch (units: kv-block tile-slots)."""
+
+    schedule: str
+    n_tasks: int
+    makespan: int
+    total_work: int
+    wasted_slots: int
+    steals: int
+    mult_max: int
+    queue_loads: list
+
+    @classmethod
+    def from_run(cls, schedule, state, res: WSRunResult) -> "RaggedStats":
+        return cls(
+            schedule=schedule,
+            n_tasks=state.n_tasks,
+            makespan=res.makespan,
+            total_work=res.total_work,
+            wasted_slots=res.wasted_slots,
+            steals=int(res.steals.sum()),
+            mult_max=int(res.mult[: max(1, state.n_tasks)].max()) if state.n_tasks else 0,
+            queue_loads=[int(c) for c in queue_costs(state)],
+        )
+
+
+def _pad_to(x, axis: int, multiple: int):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _check_drained(state, res: WSRunResult) -> None:
+    if state.n_tasks and not (res.mult[: state.n_tasks] >= 1).all():
+        missing = int((res.mult[: state.n_tasks] == 0).sum())
+        raise RuntimeError(
+            f"scheduler under-provisioned: {missing}/{state.n_tasks} tasks "
+            "never executed (rounds bound too small?)"
+        )
+
+
+def ragged_flash_attention(
+    q,
+    k,
+    v,
+    lengths,
+    *,
+    causal: bool = True,
+    schedule: str = "ws",
+    n_programs: int = 8,
+    partition: str = "batch",
+    bq: int = 32,
+    bk: int = 32,
+    interpret: bool = True,
+    return_stats: bool = False,
+):
+    """Ragged flash attention via the persistent WS megakernel.
+
+    q: [B, H, S, hd]; k, v: [B, Hkv, S, hd]; lengths: [B] host ints.
+    Rows at or past ``lengths[b]`` return 0.  Output matches the dense
+    length-masked reference exactly (up to fp32 accumulation order).
+    """
+    assert schedule in SCHEDULES, schedule
+    B, H, S, hd = q.shape
+    lengths = np.asarray(lengths, dtype=np.int64)
+    assert lengths.shape == (B,) and lengths.max(initial=0) <= S
+    bq = min(bq, max(1, S))
+    bk = min(bk, max(1, S))
+
+    tasks = emit_flash_tasks(lengths, H, bq, bk, causal=causal)
+    state = make_queue_state(tasks, n_programs, partition=partition)
+    qp = _pad_to(q, 2, bq)
+    kp = _pad_to(k, 2, bk)
+    vp = _pad_to(v, 2, bk)
+    res = run_ws_schedule(
+        state, qp, kp, vp,
+        causal=causal, bq=bq, bk=bk,
+        steal=(schedule == "ws"), interpret=interpret,
+    )
+    _check_drained(state, res)
+    div = multiplicity_divisor(tasks, res.mult, (B, H, qp.shape[2]))
+    out = (res.out / jnp.asarray(div)[..., None])[:, :, :S].astype(q.dtype)
+    if return_stats:
+        return out, RaggedStats.from_run(schedule, state, res)
+    return out
+
+
+def ragged_decode_attention(
+    q,
+    k,
+    v,
+    lengths,
+    *,
+    schedule: str = "ws",
+    n_programs: int = 8,
+    partition: str = "batch",
+    bk: int = 64,
+    interpret: bool = True,
+    return_stats: bool = False,
+):
+    """Single-token decode over ragged KV caches: q [B, H, hd] attends slots
+    ``[0, lengths[b])`` of k, v [B, Hkv, S, hd].  Dead rows (length 0)
+    return 0."""
+    assert schedule in SCHEDULES, schedule
+    B, H, hd = q.shape
+    S = k.shape[2]
+    lengths = np.asarray(lengths, dtype=np.int64)
+    assert lengths.shape == (B,) and lengths.max(initial=0) <= S
+    bk = min(bk, max(1, S))
+
+    tasks = emit_decode_tasks(lengths, H, bk)
+    state = make_queue_state(tasks, n_programs, partition=partition)
+    q4 = q[:, :, None, :]
+    kp = _pad_to(k, 2, bk)
+    vp = _pad_to(v, 2, bk)
+    res = run_ws_schedule(
+        state, q4, kp, vp,
+        causal=False, bq=1, bk=bk,
+        steal=(schedule == "ws"), interpret=interpret,
+    )
+    _check_drained(state, res)
+    div = multiplicity_divisor(tasks, res.mult, (B, H, 1))
+    out = (res.out / jnp.asarray(div)[..., None])[:, :, 0].astype(q.dtype)
+    if return_stats:
+        return out, RaggedStats.from_run(schedule, state, res)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# dense oracles
+
+
+def ragged_attention_ref(q, k, v, lengths, *, causal: bool = True):
+    """O(S^2) length-masked reference; rows >= lengths[b] are zero."""
+    B, H, S, hd = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    kf = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) * hd**-0.5
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    ln = jnp.asarray(np.asarray(lengths))[:, None, None, None]
+    mask = (kpos < ln) & (qpos < ln)
+    if causal:
+        mask &= qpos >= kpos
+    s = jnp.where(mask, s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    pr = jnp.where(jnp.isnan(pr), 0.0, pr)  # fully-masked rows -> 0
+    out = jnp.einsum("bhqk,bhkd->bhqd", pr, vf)
+    row_live = (qpos[:, 0][None, None, :, None] < ln)
+    return jnp.where(row_live, out, 0.0).astype(q.dtype)
+
+
+def ragged_decode_ref(q, k, v, lengths):
+    """Decode oracle: q [B, H, hd] attends kv slots [0, lengths[b])."""
+    B, H, hd = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = H // Hkv
+    kf = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), kf) * hd**-0.5
+    kpos = jnp.arange(S)[None, None, :]
+    ln = jnp.asarray(np.asarray(lengths))[:, None, None]
+    s = jnp.where(kpos < ln, s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    pr = jnp.where(jnp.isnan(pr), 0.0, pr)
+    out = jnp.einsum("bhs,bhsd->bhd", pr, vf)
+    return jnp.where(ln > 0, out, 0.0).astype(q.dtype)

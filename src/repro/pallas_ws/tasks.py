@@ -1,0 +1,131 @@
+"""Tile-task encoding for the device-resident work-stealing scheduler.
+
+A task is one attention tile: a (batch, head, q-block) triple plus the KV
+range it must sweep.  Tasks are fixed-width int32 records so they can live in
+an HBM array and be extracted with a single vector load — the device-side
+analogue of the paper's ``tasks[i]`` cells (Fig. 7), where ``tasks[i] = ⊥``
+becomes "field 0 == BOTTOM".
+
+Idempotence and multiplicity
+----------------------------
+Every task owns a *disjoint* slice of the output (its q-block rows for its
+(b, h)), and executing it sweeps that slice's **entire** KV range.  Task
+execution *accumulates* into the output and bumps a per-task multiplicity
+counter with plain loads/stores — so when the relaxed scheduler extracts a
+task more than once (the paper's multiplicity), the output is exactly
+``mult[t] ×`` the true tile and :func:`multiplicity_divisor` recovers the
+exact answer.  This is why the Take/Steal path needs no CAS: duplicated tile
+work is count-normalized, not forbidden.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+# int32 sentinel marking a never-filled task slot (the paper's ⊥).
+BOTTOM = -1
+
+# Record layout: 8 × int32 per task.
+TASK_WIDTH = 8
+F_OP = 0      # op id (>= 0 live; BOTTOM empty): OP_FLASH_TILE | OP_DECODE_TILE
+F_B = 1       # batch row
+F_H = 2       # query head
+F_QS = 3      # first q row of the tile
+F_QL = 4      # number of live q rows (< bq on a ragged tail tile)
+F_KV = 5      # kv end, exclusive (== sequence length)
+F_TID = 6     # global task id (indexes the multiplicity counter buffer)
+F_COST = 7    # kv blocks this task sweeps (the tile-slot cost model)
+
+OP_FLASH_TILE = 0
+OP_DECODE_TILE = 1
+
+
+@dataclass(frozen=True)
+class TileTask:
+    op: int
+    b: int
+    h: int
+    q_start: int
+    q_len: int
+    kv_end: int
+    tid: int
+    cost: int
+
+    def encode(self) -> np.ndarray:
+        return np.array(
+            [self.op, self.b, self.h, self.q_start, self.q_len,
+             self.kv_end, self.tid, self.cost],
+            dtype=np.int32,
+        )
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def emit_flash_tasks(lengths, n_heads: int, bq: int, bk: int, causal: bool = True):
+    """One task per live (b, h, q-block) of a ragged batch.
+
+    ``lengths[b]`` is the true sequence length of batch row ``b``; rows past
+    it produce no tasks at all — this is where the ragged workload's
+    imbalance comes from (a 4× longer sequence yields ~16× the causal tile
+    cost, all landing on one batch row).
+    """
+    tasks = []
+    tid = 0
+    for b, ln in enumerate(np.asarray(lengths, dtype=np.int64)):
+        ln = int(ln)
+        for h in range(n_heads):
+            for qi in range(_cdiv(ln, bq)):
+                qs = qi * bq
+                ql = min(bq, ln - qs)
+                kv_end = min(qs + bq, ln) if causal else ln
+                cost = max(1, _cdiv(kv_end, bk))
+                tasks.append(
+                    TileTask(OP_FLASH_TILE, b, h, qs, ql, ln, tid, cost)
+                )
+                tid += 1
+    return tasks
+
+
+def emit_decode_tasks(lengths, n_heads: int, bk: int):
+    """One task per live (b, h): a single query row sweeping kv [0, len)."""
+    tasks = []
+    tid = 0
+    for b, ln in enumerate(np.asarray(lengths, dtype=np.int64)):
+        ln = int(ln)
+        if ln <= 0:
+            continue
+        for h in range(n_heads):
+            tasks.append(
+                TileTask(
+                    OP_DECODE_TILE, b, h, 0, 1, ln, tid, max(1, _cdiv(ln, bk))
+                )
+            )
+            tid += 1
+    return tasks
+
+
+def multiplicity_divisor(tasks, mult, out_shape) -> np.ndarray:
+    """Per-output-row divisor [B, H, Sq] normalizing accumulated duplicates.
+
+    Each q row belongs to exactly one task, so dividing its accumulated value
+    by that task's execution count is exact.  Rows owned by no task (ragged
+    padding) get divisor 1 and stay zero.
+    """
+    B, H, Sq = out_shape
+    mult = np.asarray(mult)
+    div = np.ones((B, H, Sq), dtype=np.float32)
+    for t in tasks:
+        div[t.b, t.h, t.q_start: t.q_start + t.q_len] = max(1, int(mult[t.tid]))
+    return div
+
+
+def total_cost(tasks) -> int:
+    return int(sum(t.cost for t in tasks))
+
+
+def max_cost(tasks) -> int:
+    return max((t.cost for t in tasks), default=0)

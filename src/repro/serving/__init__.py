@@ -1,5 +1,15 @@
 """repro.serving — KV-cache serving with work-stealing request scheduling."""
 
-from .engine import ContinuousBatcher, Request, WorkStealingFrontend
+from .engine import (
+    ContinuousBatcher,
+    Request,
+    WorkStealingFrontend,
+    ragged_slot_attention,
+)
 
-__all__ = ["ContinuousBatcher", "Request", "WorkStealingFrontend"]
+__all__ = [
+    "ContinuousBatcher",
+    "Request",
+    "WorkStealingFrontend",
+    "ragged_slot_attention",
+]

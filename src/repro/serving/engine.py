@@ -42,7 +42,16 @@ class Request:
 
 
 class ContinuousBatcher:
-    def __init__(self, params, cfg, *, slots: int, capacity: int, greedy: bool = True):
+    def __init__(
+        self,
+        params,
+        cfg,
+        *,
+        slots: int,
+        capacity: int,
+        greedy: bool = True,
+        attn_schedule: str = "static",
+    ):
         self.params, self.cfg = params, cfg
         self.B, self.cap = slots, capacity
         self.caches = init_caches(cfg, slots, capacity)
@@ -50,6 +59,11 @@ class ContinuousBatcher:
         self.pos = np.zeros(slots, dtype=np.int32)  # next write slot per seq
         self.budget = np.zeros(slots, dtype=np.int32)
         self.greedy = greedy
+        # Consulted by `ragged_slot_attention` when given this batcher; the
+        # jitted decode_step path is NOT redirected (the model's attention
+        # is baked into decode_step — routing it through pallas_ws is the
+        # next integration step, see ROADMAP).
+        self.attn_schedule = attn_schedule
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(p, cfg, c, t, pos)
         )
@@ -107,6 +121,40 @@ class ContinuousBatcher:
     @property
     def n_live(self) -> int:
         return sum(r is not None for r in self.live)
+
+    def live_lengths(self) -> np.ndarray:
+        """Per-slot KV lengths (0 for free slots) — the ragged shape the
+        ws attention path schedules over."""
+        return np.where(
+            np.array([r is not None for r in self.live]), self.pos, 0
+        ).astype(np.int64)
+
+
+def ragged_slot_attention(q, k_cache, v_cache, batcher_or_lengths, *, schedule=None, bk=64):
+    """Decode attention over a continuous batcher's ragged slots.
+
+    The engine's decode slots always hold wildly different sequence lengths
+    (that is the whole point of continuous batching), so a static attention
+    grid wastes tile-slots on short slots while the longest slot serializes.
+    This hands the live lengths to the fence-free work-stealing scheduler.
+
+    ``q``: [B, H, hd] one query row per slot; ``k_cache``/``v_cache``:
+    [B, Hkv, S, hd] stacked caches; ``batcher_or_lengths``: a
+    :class:`ContinuousBatcher` or an explicit [B] length vector.  When
+    ``schedule`` is None it follows the batcher's ``attn_schedule``
+    ("ws" for a bare length vector).
+    """
+    from repro.pallas_ws.ragged import ragged_decode_attention
+
+    if isinstance(batcher_or_lengths, ContinuousBatcher):
+        lengths = batcher_or_lengths.live_lengths()
+        schedule = batcher_or_lengths.attn_schedule if schedule is None else schedule
+    else:
+        lengths = np.asarray(batcher_or_lengths)
+        schedule = "ws" if schedule is None else schedule
+    return ragged_decode_attention(
+        q, k_cache, v_cache, lengths, schedule=schedule, bk=bk
+    )
 
 
 class WorkStealingFrontend:

@@ -16,7 +16,11 @@ Checked properties (see repro.core.simulator):
 import threading
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install hypothesis)"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import ALGORITHMS, EMPTY, MULTIPLICITY_FAMILY, ThreadBackend
 from repro.core.simulator import (

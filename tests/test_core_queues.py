@@ -12,7 +12,10 @@ from repro.core import (
 )
 from repro.core.simulator import ExactFIFOOracle, ExactLIFOOracle, run_sequential
 
-FIFO_ALGOS = ["ws-mult", "ws-wmult", "b-ws-mult", "b-ws-wmult", "exact-ws", "idempotent-fifo"]
+FIFO_ALGOS = [
+    "ws-mult", "ws-wmult", "b-ws-mult", "b-ws-wmult", "exact-ws",
+    "idempotent-fifo", "pallas-ws",
+]
 DEQUE_ALGOS = ["chase-lev", "the-cilk", "idempotent-deque"]
 LIFO_ALGOS = ["idempotent-lifo"]
 

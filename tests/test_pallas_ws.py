@@ -1,0 +1,282 @@
+"""Tests for repro.pallas_ws — the device-resident fence-free WS scheduler.
+
+Four layers:
+  1. host shim (`pallas-ws` in ALGORITHMS) satisfies the paper's properties
+     under the deterministic adversarial simulator — weak multiplicity (no
+     process re-extracts a task it extracted), at-least-once FIFO, owner FIFO;
+  2. the megakernel's ragged attention matches the dense length-masked oracle
+     for skewed length distributions, for both schedules, flash and decode;
+  3. multiplicity tolerance on-device: adversarially rewound queue state makes
+     programs re-execute every task, and the multiplicity counters normalize
+     the accumulated output back to exact;
+  4. scheduling telemetry: stealing strictly improves makespan on skewed
+     loads, and the queue arrays drain consistently (layout parity).
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import ALGORITHMS, EMPTY, ThreadBackend  # noqa: E402
+from repro.core.simulator import (  # noqa: E402
+    check_no_lost_tasks_fifo,
+    check_no_process_duplicates,
+    check_owner_fifo,
+    run_program,
+)
+from repro.pallas_ws import (  # noqa: E402
+    PallasWSHost,
+    emit_flash_tasks,
+    make_queue_state,
+    multiplicity_divisor,
+    queue_costs,
+    ragged_attention_ref,
+    ragged_decode_attention,
+    ragged_decode_ref,
+    ragged_flash_attention,
+    run_ws_schedule,
+)
+
+KEY = jax.random.PRNGKey(7)
+
+
+# ---------------------------------------------------------------------------
+# 1. host shim under the adversarial simulator
+# ---------------------------------------------------------------------------
+
+
+def _program(n_tasks, n_thieves, steals_per_thief, takes):
+    prog = {0: [("put", i) for i in range(1, n_tasks + 1)] + [("take", None)] * takes}
+    for t in range(1, n_thieves + 1):
+        prog[t] = [("steal", None)] * steals_per_thief
+    return prog
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_host_weak_multiplicity_random_schedules(seed):
+    rng = random.Random(seed)
+    schedule = [rng.randrange(4) for _ in range(rng.randrange(50, 400))]
+    prog = _program(n_tasks=8, n_thieves=3, steals_per_thief=5, takes=5)
+    records = run_program(
+        lambda backend: PallasWSHost(backend=backend, capacity=64), prog, schedule
+    )
+    check_no_process_duplicates(records)  # no process extracts a task twice
+    check_no_lost_tasks_fifo(records)    # at-least-once, FIFO prefix
+    check_owner_fifo(records)            # owner respects put order
+
+
+def test_host_registered_in_core_registry():
+    q = ALGORITHMS["pallas-ws"]()
+    for i in range(20):
+        q.put(i)
+    assert [q.take() for _ in range(10)] == list(range(10))
+    assert [q.steal(1) for _ in range(10)] == list(range(10, 20))
+    assert q.take() is EMPTY and q.steal(2) is EMPTY
+
+
+def test_host_stale_head_rewind_is_bounded_per_process():
+    """The §7 drill on the device layout: a stalled owner Take rewinds Head,
+    but the thief's persistent local bound caps it at one extraction per
+    task per process (weak multiplicity), unlike the idempotent baselines."""
+    z = 6
+    q = PallasWSHost(capacity=64)
+    for i in range(1, z + 1):
+        q.put(i)
+
+    thief_got = []
+    r = z
+    while r >= 1:
+        head = max(q._local_head(0), q.Head.read(0))
+        if head < q.tail:
+            _stalled_read = q.tasks.read(head, 0)
+            for _ in range(r):
+                got = q.steal(1)
+                if got is not EMPTY:
+                    thief_got.append(got)
+            q.Head.write(head + 1, 0)  # stale write rewinds Head
+            q._local[0] = head + 1
+        r -= 1
+
+    counts = {v: thief_got.count(v) for v in set(thief_got)}
+    assert counts and max(counts.values()) == 1, counts
+
+
+def test_host_announcement_row_records_extractors():
+    q = PallasWSHost(capacity=32)
+    for i in range(4):
+        q.put(i)
+    q.take()
+    q.steal(2)
+    q.steal(1)
+    head, tail, taken = q.snapshot()
+    assert head == 3 and tail == 4
+    assert taken == {(0, 0): 0, (2, 1): 2, (1, 2): 1}
+
+
+# ---------------------------------------------------------------------------
+# 2. ragged attention == dense oracle
+# ---------------------------------------------------------------------------
+
+SKEWED_LENGTHS = [
+    np.array([64, 8, 8, 8]),            # 8x skew
+    np.array([64, 64, 16, 8]),          # mixed
+    np.array([40, 24, 8, 56]),          # non-multiples of the block size
+    np.array([64, 0, 8, 8]),            # an empty row
+]
+
+
+@pytest.mark.parametrize("lengths", SKEWED_LENGTHS, ids=["8x", "mixed", "ragged", "empty-row"])
+@pytest.mark.parametrize("schedule", ["ws", "static"])
+def test_ragged_flash_matches_reference(lengths, schedule):
+    B, H, Hkv, S, hd = 4, 4, 2, 64, 8
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd))
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd))
+    out, stats = ragged_flash_attention(
+        q, k, v, lengths, schedule=schedule, n_programs=4, bq=16, bk=16,
+        return_stats=True,
+    )
+    ref = ragged_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+    # single launch in interpret mode is sequentially-exact: no duplicates
+    assert stats.mult_max == 1
+
+
+@pytest.mark.parametrize("schedule", ["ws", "static"])
+def test_ragged_decode_matches_reference(schedule):
+    B, H, Hkv, S, hd = 4, 4, 4, 64, 8
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd))
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd))
+    lengths = np.array([64, 8, 0, 24])
+    out = ragged_decode_attention(q, k, v, lengths, schedule=schedule, n_programs=4, bk=8)
+    ref = ragged_decode_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_ragged_noncausal_and_gqa():
+    B, H, Hkv, S, hd = 2, 4, 1, 32, 8
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd))
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd))
+    lengths = np.array([32, 8])
+    out = ragged_flash_attention(
+        q, k, v, lengths, causal=False, schedule="ws", n_programs=2, bq=8, bk=8
+    )
+    ref = ragged_attention_ref(q, k, v, lengths, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# 3. multiplicity on-device: duplicates are count-normalized, not forbidden
+# ---------------------------------------------------------------------------
+
+
+def _ragged_inputs(lengths, H=2, Hkv=2, hd=8):
+    B = len(lengths)
+    S = int(max(lengths))
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd))
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd))
+    return q, k, v
+
+
+def test_device_multiplicity_normalization_under_head_rewind():
+    """Relaunch the megakernel on adversarially rewound queue state (every
+    Head dragged back to 0, every local bound wiped — the worst §7-style
+    staleness).  Every task is re-extracted and re-accumulated; mult == 2
+    everywhere and the divisor recovers the exact output."""
+    lengths = np.array([32, 8, 8, 16])
+    q, k, v = _ragged_inputs(lengths)
+    B, H, S, hd = q.shape
+    bq = bk = 8
+    tasks = emit_flash_tasks(lengths, H, bq, bk, causal=True)
+    state = make_queue_state(tasks, n_programs=4)
+
+    res1 = run_ws_schedule(state, q, k, v, causal=True, bq=bq, bk=bk, steal=True)
+    assert (res1.mult[: state.n_tasks] == 1).all()
+
+    # adversarial rewind: stale Head writes + fresh processes (no local bounds)
+    state.head = np.zeros_like(state.head)
+    state.local_head = np.zeros_like(state.local_head)
+    res2 = run_ws_schedule(
+        state, q, k, v, causal=True, bq=bq, bk=bk, steal=True,
+        out=res1.out, mult=jnp.asarray(res1.mult),
+    )
+    assert (res2.mult[: state.n_tasks] == 2).all(), "every task re-extracted once"
+
+    div = multiplicity_divisor(tasks, res2.mult, (B, H, S))
+    out = (res2.out / jnp.asarray(div)[..., None]).astype(q.dtype)
+    ref = ragged_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_device_no_program_re_extracts_within_launch():
+    """Weak multiplicity on-device: within a launch each queue slot is
+    claimed at most once per program — with fresh state, exactly once in
+    total (announcement rows prove who took what)."""
+    lengths = np.array([32, 8, 8, 16])
+    q, k, v = _ragged_inputs(lengths)
+    bq = bk = 8
+    tasks = emit_flash_tasks(lengths, 2, bq, bk, causal=True)
+    state = make_queue_state(tasks, n_programs=4)
+    res = run_ws_schedule(state, q, k, v, causal=True, bq=bq, bk=bk, steal=True)
+    live = state.tasks[:, :, 0] != -1
+    assert (res.taken[live] >= 0).all(), "every live slot extracted"
+    assert (res.taken[~live] == -1).all(), "no phantom extraction"
+    assert (res.mult[: state.n_tasks] == 1).all()
+    # heads ended exactly past each queue's last live slot
+    np.testing.assert_array_equal(res.head, live.sum(axis=1))
+
+
+# ---------------------------------------------------------------------------
+# 4. scheduling telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_stealing_beats_static_on_skewed_load():
+    lengths = np.array([64, 8, 8, 8])
+    q, k, v = _ragged_inputs(lengths)
+    _, st_static = ragged_flash_attention(
+        q, k, v, lengths, schedule="static", n_programs=4, bq=8, bk=8,
+        return_stats=True,
+    )
+    _, st_ws = ragged_flash_attention(
+        q, k, v, lengths, schedule="ws", n_programs=4, bq=8, bk=8,
+        return_stats=True,
+    )
+    assert st_ws.total_work == st_static.total_work, "same tiles executed"
+    assert st_ws.steals > 0
+    assert st_ws.makespan < st_static.makespan, (st_ws, st_static)
+    assert st_ws.wasted_slots < st_static.wasted_slots
+
+
+def test_balanced_load_needs_no_steals_to_match():
+    lengths = np.array([16, 16, 16, 16])
+    q, k, v = _ragged_inputs(lengths)
+    _, st_static = ragged_flash_attention(
+        q, k, v, lengths, schedule="static", n_programs=4, bq=8, bk=8,
+        return_stats=True,
+    )
+    _, st_ws = ragged_flash_attention(
+        q, k, v, lengths, schedule="ws", n_programs=4, bq=8, bk=8,
+        return_stats=True,
+    )
+    assert st_ws.makespan == st_static.makespan
+
+
+def test_queue_costs_reflect_partition():
+    lengths = np.array([32, 8])
+    tasks = emit_flash_tasks(lengths, 2, 8, 8, causal=True)
+    state = make_queue_state(tasks, n_programs=2, partition="batch")
+    loads = queue_costs(state)
+    assert loads[0] > loads[1]  # the long sequence's queue is heavier
+    assert loads.sum() == sum(t.cost for t in tasks)

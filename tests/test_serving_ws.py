@@ -1,0 +1,125 @@
+"""Serving-layer work-stealing tests that need no model weights.
+
+Covers the WorkStealingFrontend's weak-multiplicity tolerance — two replicas
+admitting the same request after a paper-§7-style stale-Head interleaving,
+deduplicated on completion — and the ragged ws attention hook for continuous
+batching slots.
+"""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import EMPTY  # noqa: E402
+from repro.serving.engine import Request, WorkStealingFrontend, ragged_slot_attention  # noqa: E402
+
+
+class FakeBatcher:
+    """Minimal ContinuousBatcher stand-in: admits up to B requests and
+    finishes each after `latency` steps, echoing the prompt as output."""
+
+    def __init__(self, slots=2, latency=2):
+        self.B = slots
+        self.live = [None] * slots
+        self._countdown = [0] * slots
+        self.latency = latency
+
+    @property
+    def n_live(self):
+        return sum(r is not None for r in self.live)
+
+    def admit(self, req):
+        for i, r in enumerate(self.live):
+            if r is None:
+                self.live[i] = req
+                self._countdown[i] = self.latency
+                req.out.append(int(req.tokens[-1]) + 1)
+                return True
+        return False
+
+    def step(self):
+        done = []
+        for i, r in enumerate(self.live):
+            if r is None:
+                continue
+            self._countdown[i] -= 1
+            r.out.append(len(r.out))
+            if self._countdown[i] <= 0:
+                done.append(r)
+                self.live[i] = None
+        return done
+
+
+def _frontend(n_replicas=2):
+    return WorkStealingFrontend(lambda: FakeBatcher(), n_replicas=n_replicas)
+
+
+def test_duplicate_admission_dedups_on_completion():
+    """Force the paper's weak-multiplicity duplicate on a request queue: the
+    owner's Take reads the task, stalls before publishing Head, a thief
+    Steals the same request, and the owner's stale Head write completes.
+    Both replicas admit it (admission is idempotent); exactly one result
+    survives and the duplicate completion is counted, not returned."""
+    f = _frontend()
+    req = Request(rid=42, tokens=np.array([1, 2, 3], dtype=np.int32), max_new=4)
+    f.submit(0, req)
+
+    q = f.queues[0]
+    # owner (pid 0) begins its Take: reads Head and the task slot, then stalls
+    head = max(q._local_head(0), q.Head.read(0))
+    assert head <= q.tail
+    taken_by_owner = q.tasks.read(head, 0)
+    # replica 1's scheduler (thief pid 2) steals the same request meanwhile
+    stolen = q.steal(pid=2)
+    assert stolen is taken_by_owner is req
+    # owner resumes: stale Head write publishes head+1 — the §7 interleaving
+    q.Head.write(head + 1, 0)
+    q._head[0] = head + 1
+
+    # both replicas admit their copy — idempotent (same rid, same tokens)
+    f.batchers[0].admit(Request(req.rid, req.tokens, req.max_new))
+    f.batchers[1].admit(Request(req.rid, req.tokens, req.max_new))
+    f.stats["admitted"] += 2
+    f.stats["stolen"] += 1
+
+    completed = f.run(max_iters=50)
+    assert set(completed) == {42}, "exactly one result per rid"
+    assert f.stats["dup_completed"] == 1, "the duplicate was observed and dropped"
+    assert f.stats["stolen"] == 1
+    # queues fully drained
+    assert q.take() is EMPTY and q.steal(5) is EMPTY
+
+
+def test_no_duplicates_without_contention():
+    f = _frontend()
+    for rid in range(6):
+        f.submit(rid % 2, Request(rid=rid, tokens=np.array([rid], dtype=np.int32)))
+    completed = f.run(max_iters=200)
+    assert set(completed) == set(range(6))
+    assert f.stats["dup_completed"] == 0
+
+
+def test_idle_replica_steals_backlogged_queue():
+    f = _frontend()
+    for rid in range(8):
+        f.submit(0, Request(rid=rid, tokens=np.array([rid], dtype=np.int32)))
+    completed = f.run(max_iters=200)
+    assert set(completed) == set(range(8))
+    assert f.stats["stolen"] > 0, "replica 1 should have stolen from replica 0"
+
+
+def test_ragged_slot_attention_matches_oracle():
+    """The continuous-batching hook: ragged per-slot lengths routed through
+    the device-resident ws scheduler equal the dense masked oracle."""
+    from repro.pallas_ws import ragged_decode_ref
+
+    B, H, S, hd = 4, 2, 32, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, H, S, hd))
+    v = jax.random.normal(ks[2], (B, H, S, hd))
+    lengths = np.array([32, 0, 8, 16])  # slot 1 is a free slot
+    out = ragged_slot_attention(q, k, v, lengths, schedule="ws", bk=8)
+    ref = ragged_decode_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)

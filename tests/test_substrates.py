@@ -154,10 +154,9 @@ def test_checkpoint_elastic_reshard(tmp_path):
     d = str(tmp_path / "ckpt")
     w = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
     save(d, 1, {"w": w})
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh((1, 1), ("data", "model"))
     sh = {"w": NamedSharding(mesh, P("data", "model"))}
     like = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}
     out, _ = restore(d, like, shardings=sh)
