@@ -3,9 +3,11 @@ framework-level benches.  CSV lines to stdout (tee'd to bench_output.txt).
 
 Sections:
   [zero-cost]      paper Fig 9a/9b — put-take / put-steal µs/op + instr mix
+                   (+ fence-free audit incl. the moe-ws expert dispatch)
   [spanning-tree]  paper Table 1 / Figs 10-14 — speedups per graph x algo
   [scheduler]      L1 TPU adaptation — lockstep rounds + async makespan
   [ragged]         device-resident WS tile scheduler vs static grid (pallas_ws)
+  [moe]            dropless ws MoE dispatch vs capacity-dropping dense (moe_ws)
   [loader]         L2 host pipeline — work-stealing loader throughput
   [roofline]       dry-run roofline table (if results/dryrun.jsonl exists)
 
@@ -23,7 +25,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
-        "--sections", default="zero-cost,spanning-tree,scheduler,ragged,loader,roofline"
+        "--sections",
+        default="zero-cost,spanning-tree,scheduler,ragged,moe,loader,roofline",
     )
     args = ap.parse_args(argv)
     sections = set(args.sections.split(","))
@@ -55,6 +58,14 @@ def main(argv=None):
         # nonzero when ws fails to beat static at skew >= 4 — the bench's
         # regression signal must survive the suite entry point
         status |= ragged_attention.main(["--dry-run"] if args.quick else [])
+
+    if "moe" in sections:
+        print("\n== [moe] dropless ws MoE dispatch vs dropping dense ==")
+        from . import moe_dispatch
+
+        # nonzero when ws-dropless fails to beat the dropping dense path
+        # >= 2x at skew >= 4 (or dense mysteriously stops dropping)
+        status |= moe_dispatch.main(["--dry-run"] if args.quick else [])
 
     if "loader" in sections:
         print("\n== [loader] L2 work-stealing data loader ==")

@@ -32,11 +32,20 @@ def _pallas_ws_host(backend=None, **kw):
     return PallasWSHost(backend=backend, **kw)
 
 
+def _moe_ws_host(backend=None, **kw):
+    """Lazy factory for the MoE expert-dispatch queue (same WS-WMULT slot
+    arithmetic as pallas-ws, expert-tile payloads — see repro.moe_ws)."""
+    from repro.moe_ws.dispatch import MoEDispatchHost
+
+    return MoEDispatchHost(backend=backend, **kw)
+
+
 # Registry used by tests / benchmarks.  Each factory takes (backend=None, **kw).
 ALGORITHMS = {
     "ws-mult": WSMult,
     "ws-wmult": WSWMult,
     "pallas-ws": _pallas_ws_host,
+    "moe-ws": _moe_ws_host,
     "b-ws-mult": BWSMult,
     "b-ws-wmult": BWSWMult,
     "exact-ws": ExactWS,
@@ -49,8 +58,11 @@ ALGORITHMS = {
 
 # Algorithms whose relaxation guarantees each *process* extracts a task at
 # most once (the paper's multiplicity family).  "pallas-ws" is the device
-# queue layout's host shim — same WS-WMULT protocol, so same guarantees.
-MULTIPLICITY_FAMILY = ("ws-mult", "ws-wmult", "b-ws-mult", "b-ws-wmult", "pallas-ws")
+# queue layout's host shim and "moe-ws" the expert-dispatch queue on the
+# same layout — same WS-WMULT protocol, so same guarantees.
+MULTIPLICITY_FAMILY = (
+    "ws-mult", "ws-wmult", "b-ws-mult", "b-ws-wmult", "pallas-ws", "moe-ws"
+)
 # Exactly-once algorithms (ground truth).
 EXACT_FAMILY = ("exact-ws", "chase-lev", "the-cilk")
 # At-least-once with unbounded duplicates (idempotent relaxation).

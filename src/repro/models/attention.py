@@ -22,6 +22,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .common import apply_rope, dense_init
 from .sharding import shard
@@ -348,6 +349,20 @@ def _update_at(cache, new, pos_b):
     )(cache, new, pos_b)
 
 
+def _decode_qkv(x, p, cfg, cache: KVCache, pos_b):
+    """Shared decode prologue: project q/k/v for the new token, rope at the
+    per-slot positions, and splice k/v into the cache.  Returns
+    (q [B, 1, H, hd], updated KVCache)."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    q = apply_rope(q, pos_b[:, None], cfg.rope_theta)
+    k_new = apply_rope(k_new, pos_b[:, None], cfg.rope_theta)
+    kc = _update_at(cache.k, k_new, pos_b)
+    vc = _update_at(cache.v, v_new, pos_b)
+    return q, KVCache(kc, vc)
+
+
 def gqa_decode(x, p, cfg, cache: KVCache, pos, window):
     """One-token decode. x: [B, 1, d]; pos: scalar or [B] int32 (tokens so
     far per slot — continuous batching runs heterogeneous positions).
@@ -362,13 +377,8 @@ def gqa_decode(x, p, cfg, cache: KVCache, pos, window):
     G = H // Hkv
     S = cache.k.shape[1]
     pos_b = broadcast_pos(pos, B)
-    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
-    k_new = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
-    v_new = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
-    q = apply_rope(q, pos_b[:, None], cfg.rope_theta)
-    k_new = apply_rope(k_new, pos_b[:, None], cfg.rope_theta)
-    kc = _update_at(cache.k, k_new, pos_b)
-    vc = _update_at(cache.v, v_new, pos_b)
+    q, new_cache = _decode_qkv(x, p, cfg, cache, pos_b)
+    kc, vc = new_cache.k, new_cache.v
 
     qg = q.reshape(B, Hkv, G, hd)
     # NOTE: a banded decode (dynamic window slice of the cache) was tried
@@ -384,7 +394,41 @@ def gqa_decode(x, p, cfg, cache: KVCache, pos, window):
     w = jax.nn.softmax(s, axis=1)
     o = jnp.einsum("bskg,bske->bkge", w.astype(vc.dtype), vc)
     o = o.reshape(B, 1, H, hd)
-    return jnp.einsum("bshe,hed->bsd", o, p["wo"]), KVCache(kc, vc)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"]), new_cache
+
+
+def gqa_decode_ws(x, p, cfg, cache: KVCache, pos, *, schedule="ws", bk=64,
+                  n_programs=8):
+    """One-token decode with the attention core routed through the
+    device-resident work-stealing scheduler (repro.pallas_ws).
+
+    Same projections/rope/cache splice as :func:`gqa_decode`; the masked
+    dense contraction is replaced by ragged decode tiles over the *live*
+    per-slot lengths ``pos_b + 1`` — short slots stop at their length
+    instead of sweeping the padded cache, and thieves drain the long slot's
+    queue.  Full attention only (window == 0); positions must be concrete
+    (eager serving path).
+    """
+    from repro.pallas_ws.ragged import ragged_decode_attention
+
+    B = x.shape[0]
+    hd = cfg.hd
+    H = p["wq"].shape[1]
+    pos_b = broadcast_pos(pos, B)
+    q, new_cache = _decode_qkv(x, p, cfg, cache, pos_b)
+
+    lengths = np.asarray(jax.device_get(pos_b)).astype(np.int64) + 1
+    o = ragged_decode_attention(
+        q.reshape(B, H, hd),
+        new_cache.k.transpose(0, 2, 1, 3),  # [B, S, Hkv, hd] -> [B, Hkv, S, hd]
+        new_cache.v.transpose(0, 2, 1, 3),
+        lengths,
+        schedule=schedule,
+        n_programs=n_programs,
+        bk=bk,
+    )
+    o = o.reshape(B, 1, H, hd).astype(x.dtype)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"]), new_cache
 
 
 # ---------------------------------------------------------------------------

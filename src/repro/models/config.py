@@ -47,6 +47,10 @@ class ModelConfig:
     moe_d_ff: int = 0  # per-expert hidden (deepseek/kimi "d_ff" column)
     first_k_dense: int = 0  # leading dense layers (deepseek-v2: 1)
     capacity_factor: float = 1.25
+    # "dense" = capacity-dropping dispatch/combine einsums; "ws" = dropless
+    # expert tiles through the repro.moe_ws work-stealing scheduler (eager
+    # paths only — traced code falls back to dense, see moe_ffn_dispatch)
+    moe_dispatch: str = "dense"
 
     # -- SSM (mamba2 / zamba2) -------------------------------------------------
     ssm_state: int = 0

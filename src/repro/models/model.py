@@ -292,7 +292,7 @@ def decode_step(params, cfg, caches: Caches, tokens, pos):
             h = h + s * a
             hn = rms_norm(h, p["mlp_norm"], cfg.norm_eps)
             if "moe" in p:
-                m, _ = moe_mod.moe_ffn(hn, p["moe"], cfg)
+                m, _ = moe_mod.moe_ffn_dispatch(hn, p["moe"], cfg)
             else:
                 m = swiglu(hn, p["mlp"]["wg"], p["mlp"]["wu"], p["mlp"]["wd"])
             h = h + s * m
@@ -349,6 +349,59 @@ def decode_step(params, cfg, caches: Caches, tokens, pos):
     logits = jnp.einsum("bsd,dv->bsv", h, _unembed_matrix(params, cfg))[:, 0]
     logits = _mask_pad_vocab(logits.astype(jnp.float32), cfg)
     return shard(logits, "dp", "tp"), new_caches
+
+
+def ws_decode_supported(cfg) -> bool:
+    """True when :func:`decode_step_ws` covers this architecture: full
+    (unwindowed) GQA decoder families — the shapes continuous batching
+    serves.  SSM/hybrid/encdec/MLA keep the dense jitted path."""
+    return (
+        cfg.family not in ("ssm", "hybrid", "encdec")
+        and cfg.attn_kind == "gqa"
+        and all(w == 0 for w in cfg.layer_windows)
+    )
+
+
+def decode_step_ws(
+    params, cfg, caches: Caches, tokens, pos,
+    *, schedule: str = "ws", bk: int = 64, n_programs: int = 8,
+):
+    """One decode step with attention routed through the device-resident
+    work-stealing scheduler (repro.pallas_ws) instead of the dense masked
+    contraction baked into :func:`decode_step`.
+
+    Same signature and semantics as :func:`decode_step` (``pos`` may be [B]
+    for continuous batching's heterogeneous slots), but eager: per-slot
+    lengths must be concrete to build the tile queues, so the layer loop is
+    a plain Python loop over the stacked params.  MoE layers route through
+    ``moe_ffn_dispatch`` — with ``cfg.moe_dispatch == "ws"`` both the
+    attention *and* the expert FFN of a decode step run on the scheduler.
+    """
+    assert ws_decode_supported(cfg), cfg.name
+    x = _embed(params, cfg, tokens)
+    s = tf._res_scale(cfg)
+    kv = caches.kv
+    h = x
+    for idx in range(cfg.n_layers):
+        p = jax.tree_util.tree_map(lambda a: a[idx], params["layers"])
+        cache = _layer_cache(kv, idx)
+        hn = rms_norm(h, p["attn_norm"], cfg.norm_eps)
+        a, new_cache = attn.gqa_decode_ws(
+            hn, p["attn"], cfg, cache, pos,
+            schedule=schedule, bk=bk, n_programs=n_programs,
+        )
+        h = h + s * a
+        hn = rms_norm(h, p["mlp_norm"], cfg.norm_eps)
+        if "moe" in p:
+            m, _ = moe_mod.moe_ffn_dispatch(hn, p["moe"], cfg)
+        else:
+            m = swiglu(hn, p["mlp"]["wg"], p["mlp"]["wu"], p["mlp"]["wd"])
+        h = h + s * m
+        kv = _set_layer_cache(kv, new_cache, idx)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, _unembed_matrix(params, cfg))[:, 0]
+    logits = _mask_pad_vocab(logits.astype(jnp.float32), cfg)
+    return shard(logits, "dp", "tp"), Caches(kv=kv)
 
 
 def _cross_decode(x, p, cfg, cross: attn.KVCache):
@@ -439,7 +492,7 @@ def prefill(params, cfg, batch, *, capacity: int | None = None, chunk: int = 102
             h = h + s * a
             hn = rms_norm(h, p["mlp_norm"], cfg.norm_eps)
             if "moe" in p:
-                m, _ = moe_mod.moe_ffn(hn, p["moe"], cfg)
+                m, _ = moe_mod.moe_ffn_dispatch(hn, p["moe"], cfg)
             else:
                 m = swiglu(hn, p["mlp"]["wg"], p["mlp"]["wu"], p["mlp"]["wd"])
             h = h + s * m

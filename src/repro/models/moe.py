@@ -46,6 +46,26 @@ def _capacity(group_size: int, top_k: int, n_experts: int, cf: float) -> int:
     return max(8, -(-c // 8) * 8)  # round up to 8, floor 8
 
 
+def router_topk(xg, p, cfg):
+    """Grouped router shared by every dispatch: xg [G, g, d] ->
+    (probs [G, g, E], normalized top-k gates [G, g, k], idx [G, g, k],
+    Switch-style aux loss).  The ws dropless path (repro.moe_ws) reshapes
+    through this same function, so routing/aux math cannot drift between
+    the traced dense path and the eager scheduler path.
+    """
+    E, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)  # [G, g, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss: E * sum_e fraction_tokens_e * mean_prob_e
+    onehot_any = jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(axis=2)  # [G, g, E]
+    frac = onehot_any.mean(axis=1)  # [G, E]
+    aux = E * jnp.mean(frac * probs.mean(axis=1))
+    return probs, gate_vals, idx, aux
+
+
 def moe_ffn(x, p, cfg, group_size: int = 1024):
     """x: [B, S, d] -> (y: [B, S, d], aux_loss scalar).
 
@@ -64,15 +84,7 @@ def moe_ffn(x, p, cfg, group_size: int = 1024):
     C = _capacity(g, k, E, cf)
     xg = x.reshape(G, g, d)
 
-    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
-    probs = jax.nn.softmax(logits, axis=-1)
-    gate_vals, idx = jax.lax.top_k(probs, k)  # [G, g, k]
-    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
-
-    # aux load-balance loss: E * sum_e fraction_tokens_e * mean_prob_e
-    onehot_any = jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(axis=2)  # [G, g, E]
-    frac = onehot_any.mean(axis=1)  # [G, E]
-    aux = E * jnp.mean(frac * probs.mean(axis=1))
+    _, gate_vals, idx, aux = router_topk(xg, p, cfg)
 
     # capacity slots: position of each (token, choice) within its expert queue
     sel = jax.nn.one_hot(idx, E, dtype=jnp.int32)  # [G, g, k, E]
@@ -104,3 +116,22 @@ def moe_ffn(x, p, cfg, group_size: int = 1024):
         hs = hs * jnp.einsum("gtd,df->gtf", xg, p["ws_u"])
         y = y + jnp.einsum("gtf,fd->gtd", hs, p["ws_d"])
     return y.reshape(B, S, d), aux
+
+
+def moe_ffn_dispatch(x, p, cfg, group_size: int = 1024):
+    """Route through the cfg-selected dispatch: ``cfg.moe_dispatch == "ws"``
+    runs the dropless work-stealing path (repro.moe_ws), everything else the
+    dense dropping path.
+
+    The ws dispatch builds task queues from *concrete* routing, so inside
+    ``jit``/``scan`` tracing (where x is a tracer) it falls back to the dense
+    path — eager callers (serving decode, benchmarks) get the dropless
+    scheduler, traced training steps keep the static dispatch.
+    """
+    if getattr(cfg, "moe_dispatch", "dense") == "ws" and not isinstance(
+        x, jax.core.Tracer
+    ):
+        from repro.moe_ws import moe_ffn_ws
+
+        return moe_ffn_ws(x, p, cfg, group_size)
+    return moe_ffn(x, p, cfg, group_size)

@@ -155,7 +155,7 @@ def _attn_block(h, p, cfg, positions, window, chunk, causal=True):
     h = shard(h, "dp", None, None)
     hn = rms_norm(h, p["mlp_norm"], cfg.norm_eps)
     if "moe" in p:
-        m, aux = moe_mod.moe_ffn(hn, p["moe"], cfg)
+        m, aux = moe_mod.moe_ffn_dispatch(hn, p["moe"], cfg)
     else:
         m, aux = swiglu(hn, p["mlp"]["wg"], p["mlp"]["wu"], p["mlp"]["wd"], pet=_pet(cfg)), 0.0
     h = shard(h + s * m, "dp", None, None)

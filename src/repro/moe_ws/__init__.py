@@ -1,0 +1,46 @@
+"""repro.moe_ws — dropless MoE expert dispatch on the fence-free WS scheduler.
+
+MoE routing is the most skewed real workload in this repo (top-k over
+160–384 experts with heavy-tailed loads), and the dense dispatch's answer —
+fixed per-expert capacity, over-capacity tokens dropped — is exactly the
+static-schedule trade the paper's work stealing removes.  Per-expert token
+lists become WS task queues (:mod:`dispatch`), expert FFN tiles run through
+the shared ``pallas_ws`` megakernel machinery (:mod:`expert_kernel`), and
+multiplicity-divisor normalization in the combine makes duplicated tile
+execution harmless (:mod:`layer`) — a **dropless** dispatch whose makespan
+under router skew beats the dropping dense path (benchmarks/moe_dispatch.py).
+See DESIGN.md §4.
+
+Attribute access is lazy (PEP 562) so jax-free consumers — the ``moe-ws``
+entry in ``repro.core.ALGORITHMS`` only needs :mod:`dispatch`'s host shim —
+never pay the jax import.
+"""
+
+_EXPORTS = {
+    "MoEDispatchHost": "dispatch",
+    "RoutedSet": "dispatch",
+    "route_to_tasks": "dispatch",
+    "row_divisor": "dispatch",
+    "run_moe_schedule": "expert_kernel",
+    "DispatchStats": "layer",
+    "combine_routed": "layer",
+    "expert_ffn_nodrop_ref": "layer",
+    "moe_ffn_nodrop_ref": "layer",
+    "moe_ffn_ws": "layer",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+
+    return getattr(importlib.import_module(f".{module}", __name__), name)
+
+
+def __dir__():
+    return __all__

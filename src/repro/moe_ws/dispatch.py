@@ -1,0 +1,153 @@
+"""Router output → expert-tile task queues (the MoE "Put" side).
+
+The dense MoE path fixes per-expert capacity ahead of time and *drops* every
+routed (token, expert) pair beyond it — load balance is bought with lost
+tokens.  Here routing is instead lowered to the paper's scheduling problem:
+
+1.  group the routed pairs by expert into one flat array (``RoutedSet``) —
+    each expert owns a contiguous row range, so an expert tile of ``bt`` rows
+    owns a *disjoint contiguous slice* of the routed output, exactly as an
+    attention tile owns its q-block rows;
+2.  emit one :class:`~repro.pallas_ws.tasks.ExpertTask` per tile with
+    ``cost = live rows`` (expert FFN work is tokens × d_ff and d_ff is
+    uniform, so token rows are the tile-slot unit);
+3.  Put them into per-expert owner queues (``partition="owner"``) — a hot
+    expert's queue is exactly as overloaded as its router load, which is the
+    skew the megakernel's thieves erase.
+
+No capacity anywhere: every routed pair gets a row, every row gets a task —
+the dispatch is **dropless** by construction.  Duplicated tile execution
+(the scheduler's multiplicity) is normalized by :func:`row_divisor`.
+
+``MoEDispatchHost`` runs the identical Put/Take/Steal slot arithmetic
+against :mod:`repro.core` backend cells so the adversarial simulator and the
+instruction-mix audit certify the expert dispatch path like every other
+``ALGORITHMS`` entry (registered as ``"moe-ws"``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.pallas_ws.host import PallasWSHost
+from repro.pallas_ws.tasks import ExpertTask
+
+
+@dataclass(frozen=True)
+class RoutedSet:
+    """Expert-grouped routed (token, expert) pairs, kernel-ready.
+
+    Each expert's row range is **padded up to a multiple of the tile size**
+    ``bt``, so every tile's ``[row_start, row_start + bt)`` output slice is
+    disjoint from every other tile's — required because the kernel's
+    accumulate is a read-modify-write of the whole ``bt`` slice, and on a
+    truly parallel device an unaligned tail tile would race with the next
+    expert's first tile.  Pad rows point at token 0 with gate 0 and are
+    masked dead inside the kernel, so they accumulate exactly zero and the
+    gate-weighted combine ignores them.
+    """
+
+    tok_idx: np.ndarray     # [n_rows] int32 — token index per row (0 on pads)
+    gates: np.ndarray       # [n_rows] float32 — combine weight (0 on pads)
+    expert_off: np.ndarray  # [E + 1] int32 — expert e owns rows [off[e], off[e+1])
+    loads: np.ndarray       # [E] int64 — live routed rows per expert
+    n_rows: int             # bt-aligned total rows (>= n_routed)
+    n_routed: int           # live rows (== T * top_k)
+    n_tokens: int
+
+    @property
+    def n_experts(self) -> int:
+        return len(self.expert_off) - 1
+
+    def expert_loads(self) -> np.ndarray:
+        """Live routed rows per expert — the raw router skew."""
+        return self.loads
+
+
+def route_to_tasks(
+    idx, gates, n_experts: int, bt: int = 8
+) -> Tuple[List[ExpertTask], RoutedSet]:
+    """Lower concrete top-k routing to expert tiles.
+
+    ``idx``: [T, k] int expert choices; ``gates``: [T, k] float combine
+    weights (already normalized).  Grouping is stable in (token, choice)
+    order within each expert, so the layout is deterministic.
+    """
+    idx = np.asarray(idx)
+    gates = np.asarray(gates, dtype=np.float32)
+    T, k = idx.shape
+    assert gates.shape == (T, k), (gates.shape, (T, k))
+
+    flat_e = idx.reshape(-1)
+    flat_t = np.repeat(np.arange(T, dtype=np.int32), k)
+    flat_g = gates.reshape(-1)
+    # stable counting sort by expert: contiguous per-expert row ranges
+    order = np.argsort(flat_e, kind="stable")
+    loads = np.bincount(flat_e, minlength=n_experts).astype(np.int64)
+    padded = -(-loads // bt) * bt  # bt-aligned range per expert
+    expert_off = np.zeros(n_experts + 1, dtype=np.int32)
+    np.cumsum(padded, out=expert_off[1:])
+    n_rows = max(bt, int(expert_off[-1]))
+
+    tok_idx = np.zeros(n_rows, dtype=np.int32)
+    gate_rows = np.zeros(n_rows, dtype=np.float32)
+    src = 0
+    for e in range(n_experts):
+        lo = int(expert_off[e])
+        ln = int(loads[e])
+        tok_idx[lo: lo + ln] = flat_t[order[src: src + ln]]
+        gate_rows[lo: lo + ln] = flat_g[order[src: src + ln]]
+        src += ln
+
+    tasks: List[ExpertTask] = []
+    tid = 0
+    for e in range(n_experts):
+        start = int(expert_off[e])
+        for i in range(0, int(loads[e]), bt):
+            rl = min(bt, int(loads[e]) - i)
+            tasks.append(ExpertTask(expert=e, row_start=start + i, row_len=rl,
+                                    tid=tid, cost=rl))
+            tid += 1
+
+    return tasks, RoutedSet(
+        tok_idx=tok_idx,
+        gates=gate_rows,
+        expert_off=expert_off,
+        loads=loads,
+        n_rows=n_rows,
+        n_routed=T * k,
+        n_tokens=T,
+    )
+
+
+def row_divisor(tasks: Sequence[ExpertTask], mult, n_rows: int) -> np.ndarray:
+    """Per-row multiplicity divisor (the expert-family analogue of
+    ``tasks.multiplicity_divisor``): each live row belongs to exactly one
+    tile, so dividing its accumulated output by that tile's execution count
+    is exact.  Pad rows (gate 0, accumulate 0) keep divisor 1.
+    """
+    mult = np.asarray(mult)
+    div = np.ones((n_rows,), dtype=np.float32)
+    for t in tasks:
+        div[t.row_start: t.row_start + t.row_len] = max(1, int(mult[t.tid]))
+    return div
+
+
+class MoEDispatchHost(PallasWSHost):
+    """Expert-dispatch queue on the device array layout, for the property
+    harness and the zero-cost instruction-mix audit.
+
+    Identical protocol to :class:`PallasWSHost` — the point of the task-family
+    generalization is that expert tiles ride the *same* fence-free slot
+    arithmetic — but sized for per-layer expert queues and accepting encoded
+    :class:`ExpertTask` payloads via :meth:`put_task`.
+    """
+
+    def __init__(self, backend=None, capacity: int = 4096, **kw):
+        super().__init__(backend=backend, capacity=capacity, **kw)
+
+    def put_task(self, task: ExpertTask) -> bool:
+        return self.put(tuple(int(x) for x in task.encode()))

@@ -1,0 +1,96 @@
+"""Expert-tile execution body for the persistent WS megakernel.
+
+One task = ``row_len`` routed rows of one expert's gated FFN:
+
+    gather   x[tok_idx[rs : rs + bt]]                  # [bt, d]
+    FFN      silu(x @ wg[e]) * (x @ wu[e]) @ wd[e]     # [bt, f] -> [bt, d]
+    scatter  out[rs : rs + bt] += y                    # contiguous accumulate
+
+The scatter is *contiguous* because the routed rows are grouped by expert
+(:mod:`repro.moe_ws.dispatch`): the task's output slice is disjoint from
+every other task's, so duplicated execution under the relaxed scheduler adds
+whole extra copies of the same rows — ``mult[tid]`` normalizes them out,
+exactly as for attention q-blocks.  Dead pad rows of a ragged tail tile are
+zeroed before the accumulate.
+
+The Take/Steal protocol, the lockstep clocks, and the queue arrays are the
+shared machinery of :mod:`repro.pallas_ws.kernel` — this module only
+supplies the ``execute`` body and the launch wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.pallas_ws.kernel import WSRunResult, launch_ws_grid
+from repro.pallas_ws.queues import QueueState
+from repro.pallas_ws.tasks import F_E, F_RL, F_RS
+
+
+def _expert_execute(tasks_ref, fq, fs, pure, out_ref, *, bt: int):
+    """Gather–FFN–scatter-accumulate for one expert tile."""
+    tok_idx_ref, x_ref, wg_ref, wu_ref, wd_ref = pure
+    e = tasks_ref[fq, fs, F_E]
+    rs = tasks_ref[fq, fs, F_RS]
+    rl = tasks_ref[fq, fs, F_RL]
+
+    d = x_ref.shape[-1]
+    f = wg_ref.shape[-1]
+    idx = tok_idx_ref[pl.ds(rs, bt)]                      # [bt]
+    xt = jnp.take(x_ref[...], idx, axis=0).astype(jnp.float32)  # gather [bt, d]
+    wg = wg_ref[pl.ds(e, 1)].reshape(d, f).astype(jnp.float32)
+    wu = wu_ref[pl.ds(e, 1)].reshape(d, f).astype(jnp.float32)
+    wd = wd_ref[pl.ds(e, 1)].reshape(f, d).astype(jnp.float32)
+
+    h = jax.nn.silu(
+        jax.lax.dot_general(xt, wg, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    ) * jax.lax.dot_general(xt, wu, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    yt = jax.lax.dot_general(h, wd, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [bt, d]
+
+    row_live = jax.lax.broadcasted_iota(jnp.int32, (bt, d), 0) < rl
+    yt = jnp.where(row_live, yt, 0.0)
+
+    # Idempotent-accumulate into this task's disjoint routed-row slice.
+    cur = out_ref[pl.ds(rs, bt), :]
+    out_ref[pl.ds(rs, bt), :] = cur + yt
+
+
+def run_moe_schedule(
+    state: QueueState,
+    x,
+    tok_idx,
+    wg,
+    wu,
+    wd,
+    *,
+    bt: int,
+    steal: bool = True,
+    rounds: Optional[int] = None,
+    out: Optional[jax.Array] = None,
+    mult: Optional[jax.Array] = None,
+    interpret: bool = True,
+) -> WSRunResult:
+    """Launch the expert megakernel over a prepared :class:`QueueState`.
+
+    ``x``: [T, d] token activations; ``tok_idx``: [n_padded] routed row →
+    token map (``RoutedSet.tok_idx``); ``wg``/``wu``: [E, d, f]; ``wd``:
+    [E, f, d].  ``out`` is the routed-row output [n_padded, d] (f32,
+    mult-weighted accumulation), carried over on relaunch for the
+    multiplicity drills.
+    """
+    n_padded = tok_idx.shape[0]
+    d = x.shape[-1]
+    out = jnp.zeros((n_padded, d), jnp.float32) if out is None else out
+    execute = functools.partial(_expert_execute, bt=bt)
+    return launch_ws_grid(
+        state, execute, (tok_idx, x, wg, wu, wd), out,
+        steal=steal, rounds=rounds, mult=mult, interpret=interpret,
+    )

@@ -1,0 +1,177 @@
+"""``moe_ffn_ws`` — dropless MoE FFN on the fence-free WS tile scheduler.
+
+Drop-in for :func:`repro.models.moe.moe_ffn` (same signature, same
+``(y, aux_loss)`` return, same router math) with the dense capacity-dropping
+dispatch replaced by expert-tile tasks through the ``pallas_ws`` megakernel:
+
+* router top-k → per-expert owner queues (``dispatch.route_to_tasks``) —
+  **every** routed (token, expert) pair gets a task row; there is no
+  capacity factor and nothing is dropped;
+* programs Take their own expert's tiles and Steal from overloaded experts'
+  stale head views (plain loads/stores, no CAS/fence) — the router's
+  heavy-tailed load lands as queue skew and the thieves flatten it;
+* the combine divides each routed row by its tile's execution count
+  (``dispatch.row_divisor``) before the gate-weighted scatter-add, so
+  duplicated tile execution under the relaxed scheduler is exactly
+  normalized out — multiplicity makes the dropless dispatch *cheap*, not
+  merely possible.
+
+Routing must be concrete to build queues (the same host-side Put as the
+ragged attention front-ends), so this path is eager-only: calling it under
+``jit`` raises, and :func:`repro.models.moe.moe_ffn_dispatch` falls back to
+the dense path inside traced code.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.pallas_ws.queues import make_queue_state
+from repro.pallas_ws.ragged import RaggedStats as DispatchStats  # family-neutral telemetry
+
+from .dispatch import route_to_tasks, row_divisor
+from .expert_kernel import run_moe_schedule
+
+SCHEDULES = ("ws", "static")
+
+
+def _router(x_flat, p, cfg, group_size: int):
+    """The dense path's router (`models.moe.router_topk` — one
+    implementation, shared, so routing/aux math cannot drift between the
+    dispatches), reshaped to flat [T, ...] views."""
+    from repro.models.moe import router_topk
+
+    T, d = x_flat.shape
+    g = min(group_size, T)
+    G = T // g
+    assert G * g == T, (T, g)
+    probs, gate_vals, idx, aux = router_topk(x_flat.reshape(G, g, d), p, cfg)
+    k = cfg.top_k
+    return (
+        probs.reshape(T, cfg.n_experts),
+        gate_vals.reshape(T, k),
+        idx.reshape(T, k),
+        aux,
+    )
+
+
+def _shared_experts(x_flat, p):
+    hs = jax.nn.silu(jnp.einsum("td,df->tf", x_flat, p["ws_g"]))
+    hs = hs * jnp.einsum("td,df->tf", x_flat, p["ws_u"])
+    return jnp.einsum("tf,fd->td", hs, p["ws_d"])
+
+
+def _check_drained(state, res) -> None:
+    if state.n_tasks and not (res.mult[: state.n_tasks] >= 1).all():
+        missing = int((res.mult[: state.n_tasks] == 0).sum())
+        raise RuntimeError(
+            f"expert scheduler under-provisioned: {missing}/{state.n_tasks} "
+            "tiles never executed (rounds bound too small?)"
+        )
+
+
+def combine_routed(routed, tasks, res):
+    """Multiplicity-normalized, gate-weighted combine of an expert-kernel
+    run: divide each row's accumulation by its tile's execution count
+    (``row_divisor``), then scatter-add ``gate * row`` back to the tokens.
+    Pad rows carry gate 0, so they vanish.  Returns [n_tokens, d] float32.
+
+    The single combine implementation — `moe_ffn_ws`, the dispatch
+    benchmark, and the dropless property tests all call this.
+    """
+    div = row_divisor(tasks, res.mult, routed.n_rows)
+    yr = res.out / jnp.asarray(div)[:, None]
+    return jnp.zeros((routed.n_tokens, res.out.shape[-1]), jnp.float32).at[
+        jnp.asarray(routed.tok_idx)
+    ].add(jnp.asarray(routed.gates)[:, None] * yr)
+
+
+def expert_ffn_nodrop_ref(idx, gates, x, wg, wu, wd):
+    """Raw-weight O(T·E) no-drop oracle: every expert's gated FFN applied to
+    every token, combined with the routed gates.  ``x``: [T, d]; returns
+    [T, d] float32."""
+    xf = jnp.asarray(x).astype(jnp.float32)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xf, jnp.asarray(wg).astype(jnp.float32)))
+    h = h * jnp.einsum("td,edf->tef", xf, jnp.asarray(wu).astype(jnp.float32))
+    y_all = jnp.einsum("tef,efd->ted", h, jnp.asarray(wd).astype(jnp.float32))
+    y_sel = jnp.take_along_axis(y_all, jnp.asarray(idx)[:, :, None], axis=1)
+    return (jnp.asarray(gates)[:, :, None] * y_sel).sum(axis=1)
+
+
+def moe_ffn_ws(
+    x,
+    p,
+    cfg,
+    group_size: int = 1024,
+    *,
+    schedule: str = "ws",
+    n_programs: int = 8,
+    bt: int = 8,
+    interpret: bool = True,
+    return_stats: bool = False,
+):
+    """x: [B, S, d] -> (y: [B, S, d], aux_loss scalar) — dropless WS dispatch.
+
+    ``schedule="ws"`` steals; ``"static"`` drains owner queues only (same
+    kernel and cost accounting — the makespan baseline).  ``bt`` is the
+    expert-tile row count; ``n_programs`` the persistent program count.
+    """
+    assert schedule in SCHEDULES, schedule
+    if isinstance(x, jax.core.Tracer):
+        raise TypeError(
+            "moe_ffn_ws needs concrete routing to build task queues; call it "
+            "eagerly or use moe_ffn_dispatch (falls back to dense under jit)"
+        )
+    B, S, d = x.shape
+    E = cfg.n_experts
+    x_flat = x.reshape(B * S, d)
+    probs, gate_vals, idx, aux = _router(x_flat, p, cfg, group_size)
+
+    # host-side Put: concrete routing -> expert-tile owner queues.  With
+    # stealing every expert gets its own queue (the per-expert token list);
+    # the static baseline needs every queue owned by a program, so experts
+    # are placed round-robin over programs — classic expert parallelism.
+    idx_h = np.asarray(jax.device_get(idx))
+    gates_h = np.asarray(jax.device_get(gate_vals))
+    tasks, routed = route_to_tasks(idx_h, gates_h, E, bt=bt)
+    n_queues = E if schedule == "ws" else n_programs
+    state = make_queue_state(tasks, n_programs, n_queues=n_queues, partition="owner")
+
+    res = run_moe_schedule(
+        state,
+        x_flat.astype(jnp.float32),
+        routed.tok_idx,
+        p["we_g"], p["we_u"], p["we_d"],
+        bt=bt,
+        steal=(schedule == "ws"),
+        interpret=interpret,
+    )
+    _check_drained(state, res)
+
+    # multiplicity-divisor normalization, then the gate-weighted combine:
+    # a dropless scatter-add over every routed pair.
+    y = combine_routed(routed, tasks, res)
+
+    if cfg.n_shared_experts:
+        y = y + _shared_experts(x_flat, p).astype(jnp.float32)
+    y = y.astype(x.dtype).reshape(B, S, d)
+    if return_stats:
+        return y, aux, DispatchStats.from_run(schedule, state, res)
+    return y, aux
+
+
+def moe_ffn_nodrop_ref(x, p, cfg, group_size: int = 1024):
+    """O(T·E) dense **no-drop** oracle: every expert applied to every token,
+    combined with the routed gates — the exact answer a dropless dispatch
+    must reproduce (the capacity-dropping path only approximates it)."""
+    B, S, d = x.shape
+    x_flat = x.reshape(B * S, d)
+    _, gate_vals, idx, aux = _router(x_flat, p, cfg, group_size)
+    y = expert_ffn_nodrop_ref(
+        idx, gate_vals, x_flat, p["we_g"], p["we_u"], p["we_d"]
+    )
+    if cfg.n_shared_experts:
+        y = y + _shared_experts(x_flat, p).astype(jnp.float32)
+    return y.astype(x.dtype).reshape(B, S, d), aux

@@ -18,7 +18,10 @@ _EXPORTS = {
     "PallasWSHost": "host",
     "WSRunResult": "kernel",
     "default_rounds": "kernel",
+    "launch_ws_grid": "kernel",
     "run_ws_schedule": "kernel",
+    "ws_account": "kernel",
+    "ws_try_extract": "kernel",
     "QueueState": "queues",
     "make_queue_state": "queues",
     "partition_tasks": "queues",
@@ -29,11 +32,19 @@ _EXPORTS = {
     "ragged_decode_ref": "ragged",
     "ragged_flash_attention": "ragged",
     "BOTTOM": "tasks",
+    "OP_DECODE_TILE": "tasks",
+    "OP_EXPERT_TILE": "tasks",
+    "OP_FLASH_TILE": "tasks",
+    "TASK_FAMILIES": "tasks",
     "TASK_WIDTH": "tasks",
+    "ExpertTask": "tasks",
+    "TaskFamily": "tasks",
     "TileTask": "tasks",
     "emit_decode_tasks": "tasks",
     "emit_flash_tasks": "tasks",
+    "family_of": "tasks",
     "multiplicity_divisor": "tasks",
+    "register_family": "tasks",
 }
 
 __all__ = sorted(_EXPORTS)

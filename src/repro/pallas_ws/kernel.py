@@ -1,13 +1,13 @@
 """Persistent-grid Pallas megakernel: fence-free work-stealing tile scheduler.
 
-One ``pallas_call`` runs the whole ragged-attention workload.  Grid is
-``(rounds, n_programs)`` with the program dim innermost, so the execution
-order is round-major: every program performs at most one Take/Steal per
-round, and a program whose current task costs ``c`` tile-slots stays busy
-(``clock[p] > r``) for the next ``c`` rounds.  This block-granular lockstep
-is the deterministic serialization of P persistent cores running the same
-loop in real time — the same modeling device as :mod:`repro.sched`'s
-lockstep rounds, now *inside* one kernel over HBM-resident queue arrays.
+One ``pallas_call`` runs a whole tile workload.  Grid is ``(rounds,
+n_programs)`` with the program dim innermost, so the execution order is
+round-major: every program performs at most one Take/Steal per round, and a
+program whose current task costs ``c`` tile-slots stays busy (``clock[p] >
+r``) for the next ``c`` rounds.  This block-granular lockstep is the
+deterministic serialization of P persistent cores running the same loop in
+real time — the same modeling device as :mod:`repro.sched`'s lockstep
+rounds, now *inside* one kernel over HBM-resident queue arrays.
 
 The extraction protocol is WS-WMULT (paper Fig. 7) verbatim, on the
 :mod:`repro.pallas_ws.queues` layout:
@@ -22,25 +22,34 @@ The extraction protocol is WS-WMULT (paper Fig. 7) verbatim, on the
 Plain loads and stores only — no CAS, no semaphore, no fence.  A stale
 ``head`` write may rewind a queue and hand the same tile to two programs;
 the tile write is an *accumulate* and ``mult`` counts executions, so the
-caller divides the duplicates back out (see ``tasks.multiplicity_divisor``).
-Each program's ``local_head`` row is strictly increasing, so no program
+caller divides the duplicates back out (see ``tasks.multiplicity_divisor``
+for attention, ``moe_ws.dispatch.row_divisor`` for expert tiles).  Each
+program's ``local_head`` row is strictly increasing, so no program
 re-extracts a slot it already extracted — the paper's weak multiplicity,
 verified on-device by tests/test_pallas_ws.py.
+
+Everything scheduler-side is **task-family agnostic**: :func:`ws_try_extract`
+(the protocol), :func:`ws_account` (clock/work/steal/multiplicity
+bookkeeping), and :func:`launch_ws_grid` (queue-array plumbing around
+``pallas_call``) never inspect the operand fields of a task record.  A family
+plugs in by supplying an ``execute(tasks_ref, fq, fs, pure_refs, out_ref)``
+body — the attention body lives here (:func:`run_ws_schedule`), the MoE
+expert-FFN body in :mod:`repro.moe_ws.expert_kernel`.
 
 Interpret mode (`interpret=True`, the CI path) executes grid cells
 sequentially, which makes single-launch runs sequentially-exact (mult == 1
 everywhere) — duplicates are exercised by seeding adversarial
 ``head``/``local_head`` snapshots, mirroring the §7 drills of the host
-tests.  On real TPU the queue arrays would sit in SMEM/VMEM and q/k/v tiles
-would be DMA'd from HBM per task; the protocol itself is memory-space
-agnostic.
+tests.  On real TPU the queue arrays would sit in SMEM/VMEM and task
+operands would be DMA'd from HBM per task; the protocol itself is
+memory-space agnostic.
 """
 
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Optional
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -62,31 +71,23 @@ from .tasks import (
 
 NEG_INF = -1e30
 
+# Order of the mutable (input-output aliased) queue/telemetry arrays every
+# family launch carries: head, local_head, taken, clock, work, steals, mult,
+# out.  ``launch_ws_grid`` owns this layout.
+N_MUTABLE = 8
 
-def _ws_kernel(
-    # aliased inputs (stale snapshots — state is read/written via the outputs)
-    head_i, local_head_i, taken_i, clock_i, work_i, steals_i, mult_i, out_i,
-    # pure inputs
-    tasks_ref, q_ref, k_ref, v_ref,
-    # live (aliased) outputs
-    head_ref, local_head_ref, taken_ref, clock_ref, work_ref, steals_ref,
-    mult_ref, out_ref,
-    *,
-    n_programs: int,
-    n_queues: int,
-    capacity: int,
-    bq: int,
-    bk: int,
-    causal: bool,
-    steal: bool,
-    scale: float,
-    g: int,
+
+def ws_try_extract(
+    r, p, head_ref, local_head_ref, tasks_ref, clock_ref,
+    *, n_queues: int, capacity: int, steal: bool,
 ):
-    r = pl.program_id(0)
-    p = pl.program_id(1)
+    """One Take/Steal attempt of WS-WMULT for program ``p`` at round ``r``.
 
-    # A program extracts only when its virtual clock has caught up with the
-    # round counter — i.e. it is idle in the modeled parallel execution.
+    Scans its own queue first, then (when stealing) every victim in
+    p-relative order, claiming the first live slot with plain writes only.
+    Returns ``(found, queue, slot)``; no-op (found=False) while the
+    program's clock says it is still busy with its previous tile.
+    """
     idle = clock_ref[p] <= r
 
     def scan_one(j, carry):
@@ -107,81 +108,67 @@ def _ws_kernel(
 
     n_scan = n_queues if steal else 1
     zero = (jnp.bool_(False), jnp.int32(0), jnp.int32(0))
-    found, fq, fs = jax.lax.cond(
+    return jax.lax.cond(
         idle,
         lambda: jax.lax.fori_loop(0, n_scan, scan_one, zero),
         lambda: zero,
     )
 
+
+def ws_account(
+    r, p, fq, fs, tid, cost,
+    taken_ref, clock_ref, work_ref, steals_ref, mult_ref,
+    *, n_queues: int,
+):
+    """Post-execution bookkeeping shared by every task family: announcement
+    row, multiplicity counter, work/steal telemetry, lockstep clock bump."""
+    mult_ref[tid] = mult_ref[tid] + 1
+    taken_ref[fq, fs] = p
+    work_ref[p] = work_ref[p] + cost
+    own = jax.lax.rem(p, n_queues)
+    steals_ref[p] = steals_ref[p] + jnp.where(fq != own, 1, 0)
+    clock_ref[p] = jnp.maximum(clock_ref[p], r) + cost
+
+
+def _generic_ws_kernel(
+    *refs,
+    execute: Callable,
+    n_pure: int,
+    n_queues: int,
+    capacity: int,
+    steal: bool,
+):
+    """Scheduler shell around a family ``execute`` body.
+
+    Ref layout (positional, fixed by :func:`launch_ws_grid`): N_MUTABLE stale
+    input snapshots, the tasks array, ``n_pure`` family inputs, then the
+    N_MUTABLE live (aliased) output refs.
+    """
+    tasks_ref = refs[N_MUTABLE]
+    pure = refs[N_MUTABLE + 1: N_MUTABLE + 1 + n_pure]
+    (head_ref, local_head_ref, taken_ref, clock_ref, work_ref, steals_ref,
+     mult_ref, out_ref) = refs[N_MUTABLE + 1 + n_pure:]
+
+    r = pl.program_id(0)
+    p = pl.program_id(1)
+    found, fq, fs = ws_try_extract(
+        r, p, head_ref, local_head_ref, tasks_ref, clock_ref,
+        n_queues=n_queues, capacity=capacity, steal=steal,
+    )
+
     @pl.when(found)
     def _execute():
-        b = tasks_ref[fq, fs, F_B]
-        h = tasks_ref[fq, fs, F_H]
-        qs = tasks_ref[fq, fs, F_QS]
-        ql = tasks_ref[fq, fs, F_QL]
-        kv_end = tasks_ref[fq, fs, F_KV]
-        tid = tasks_ref[fq, fs, F_TID]
-        cost = tasks_ref[fq, fs, F_COST]
-        kh = jax.lax.div(h, g)
-
-        qt = q_ref[pl.ds(b, 1), pl.ds(h, 1), pl.ds(qs, bq), :]
-        qt = qt.reshape(bq, q_ref.shape[-1]).astype(jnp.float32)
-
-        def kv_block(ki, mla):
-            m, l, acc = mla
-            kt = k_ref[pl.ds(b, 1), pl.ds(kh, 1), pl.ds(ki * bk, bk), :]
-            vt = v_ref[pl.ds(b, 1), pl.ds(kh, 1), pl.ds(ki * bk, bk), :]
-            kt = kt.reshape(bk, -1).astype(jnp.float32)
-            vt = vt.reshape(bk, -1).astype(jnp.float32)
-            s = jax.lax.dot_general(
-                qt, kt, (((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            ) * scale  # [bq, bk]
-            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-            valid = kpos < kv_end
-            if causal:
-                qpos = qs + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-                valid &= kpos <= qpos
-            s = jnp.where(valid, s, NEG_INF)
-            m_new = jnp.maximum(m, s.max(axis=1))
-            pexp = jnp.exp(s - m_new[:, None])
-            corr = jnp.exp(m - m_new)
-            l_new = l * corr + pexp.sum(axis=1)
-            acc_new = acc * corr[:, None] + jax.lax.dot_general(
-                pexp, vt, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            )
-            return (m_new, l_new, acc_new)
-
-        hd = q_ref.shape[-1]
-        m0 = jnp.full((bq,), NEG_INF, jnp.float32)
-        l0 = jnp.zeros((bq,), jnp.float32)
-        a0 = jnp.zeros((bq, hd), jnp.float32)
-        # Dynamic trip count: a real persistent core sweeps only the live
-        # blocks — this is exactly the cost the work counters account.
-        m, l, acc = jax.lax.fori_loop(0, cost, kv_block, (m0, l0, a0))
-
-        tile = acc / jnp.maximum(l, 1e-30)[:, None]
-        row_live = jax.lax.broadcasted_iota(jnp.int32, (bq, hd), 0) < ql
-        tile = jnp.where(row_live, tile, 0.0)
-
-        # Idempotent-accumulate: duplicates add whole extra copies of the
-        # same tile, which mult[tid] normalizes out host-side.
-        cur = out_ref[pl.ds(b, 1), pl.ds(h, 1), pl.ds(qs, bq), :]
-        out_ref[pl.ds(b, 1), pl.ds(h, 1), pl.ds(qs, bq), :] = (
-            cur + tile[None, None]
+        execute(tasks_ref, fq, fs, pure, out_ref)
+        ws_account(
+            r, p, fq, fs, tasks_ref[fq, fs, F_TID], tasks_ref[fq, fs, F_COST],
+            taken_ref, clock_ref, work_ref, steals_ref, mult_ref,
+            n_queues=n_queues,
         )
-        mult_ref[tid] = mult_ref[tid] + 1
-        taken_ref[fq, fs] = p
-        work_ref[p] = work_ref[p] + cost
-        own = jax.lax.rem(p, n_queues)
-        steals_ref[p] = steals_ref[p] + jnp.where(fq != own, 1, 0)
-        clock_ref[p] = jnp.maximum(clock_ref[p], r) + cost
 
 
 @dataclass
 class WSRunResult:
-    out: jax.Array          # [B, H, Sq, hd] float32, mult-weighted accumulation
+    out: jax.Array          # family output, mult-weighted accumulation
     head: np.ndarray        # final shared heads            [n_queues]
     local_head: np.ndarray  # final per-program bounds      [n_programs, n_queues]
     taken: np.ndarray       # announcement rows             [n_queues, capacity]
@@ -222,6 +209,140 @@ def default_rounds(state: QueueState, steal: bool) -> int:
     return int(costs.max()) + 8
 
 
+def launch_ws_grid(
+    state: QueueState,
+    execute: Callable,
+    pure: Sequence[jax.Array],
+    out: jax.Array,
+    *,
+    steal: bool = True,
+    rounds: Optional[int] = None,
+    mult: Optional[jax.Array] = None,
+    interpret: bool = True,
+) -> WSRunResult:
+    """Run the persistent WS grid with a family ``execute`` body.
+
+    ``execute(tasks_ref, fq, fs, pure_refs, out_ref)`` performs the tile at
+    queue slot ``(fq, fs)`` and *accumulates* into ``out_ref``; the shell
+    handles extraction and bookkeeping.  ``out``/``mult`` may be carried over
+    from a previous launch (resume / multiplicity drills).
+    """
+    P = state.n_programs
+    rounds = default_rounds(state, steal) if rounds is None else rounds
+    n_tasks = max(1, state.n_tasks)
+    mult = jnp.zeros((n_tasks,), jnp.int32) if mult is None else mult
+
+    kernel = functools.partial(
+        _generic_ws_kernel,
+        execute=execute,
+        n_pure=len(pure),
+        n_queues=state.n_queues,
+        capacity=state.capacity,
+        steal=steal,
+    )
+
+    def full(a):
+        return pl.BlockSpec(a.shape, lambda r, p, nd=a.ndim: (0,) * nd)
+
+    mutable = [
+        jnp.asarray(state.head),
+        jnp.asarray(state.local_head),
+        jnp.asarray(state.taken),
+        jnp.zeros((P,), jnp.int32),   # clock
+        jnp.zeros((P,), jnp.int32),   # work
+        jnp.zeros((P,), jnp.int32),   # steals
+        jnp.asarray(mult),
+        jnp.asarray(out),
+    ]
+    pure_arrays = [jnp.asarray(state.tasks)] + [jnp.asarray(a) for a in pure]
+    outs = pl.pallas_call(
+        kernel,
+        grid=(rounds, P),
+        in_specs=[full(a) for a in mutable] + [full(a) for a in pure_arrays],
+        out_specs=[full(a) for a in mutable],
+        out_shape=[jax.ShapeDtypeStruct(a.shape, a.dtype) for a in mutable],
+        input_output_aliases={i: i for i in range(len(mutable))},
+        interpret=interpret,
+    )(*mutable, *pure_arrays)
+    head, local_head, taken, clock, work, steals, mult, out = outs
+    return WSRunResult(
+        out=out,
+        head=np.asarray(head),
+        local_head=np.asarray(local_head),
+        taken=np.asarray(taken),
+        clock=np.asarray(clock),
+        work=np.asarray(work),
+        steals=np.asarray(steals),
+        mult=np.asarray(mult),
+    )
+
+
+# ---------------------------------------------------------------------------
+# attention family: flash/decode tile body
+
+
+def _attention_execute(
+    tasks_ref, fq, fs, pure, out_ref,
+    *, bq: int, bk: int, causal: bool, scale: float, g: int,
+):
+    """Flash-attention tile: online-softmax sweep of the task's kv range,
+    accumulated into the task's disjoint q-block rows."""
+    q_ref, k_ref, v_ref = pure
+    b = tasks_ref[fq, fs, F_B]
+    h = tasks_ref[fq, fs, F_H]
+    qs = tasks_ref[fq, fs, F_QS]
+    ql = tasks_ref[fq, fs, F_QL]
+    kv_end = tasks_ref[fq, fs, F_KV]
+    cost = tasks_ref[fq, fs, F_COST]
+    kh = jax.lax.div(h, g)
+
+    qt = q_ref[pl.ds(b, 1), pl.ds(h, 1), pl.ds(qs, bq), :]
+    qt = qt.reshape(bq, q_ref.shape[-1]).astype(jnp.float32)
+
+    def kv_block(ki, mla):
+        m, l, acc = mla
+        kt = k_ref[pl.ds(b, 1), pl.ds(kh, 1), pl.ds(ki * bk, bk), :]
+        vt = v_ref[pl.ds(b, 1), pl.ds(kh, 1), pl.ds(ki * bk, bk), :]
+        kt = kt.reshape(bk, -1).astype(jnp.float32)
+        vt = vt.reshape(bk, -1).astype(jnp.float32)
+        s = jax.lax.dot_general(
+            qt, kt, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # [bq, bk]
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        valid = kpos < kv_end
+        if causal:
+            qpos = qs + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            valid &= kpos <= qpos
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        pexp = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + pexp.sum(axis=1)
+        acc_new = acc * corr[:, None] + jax.lax.dot_general(
+            pexp, vt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new)
+
+    hd = q_ref.shape[-1]
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, hd), jnp.float32)
+    # Dynamic trip count: a real persistent core sweeps only the live
+    # blocks — this is exactly the cost the work counters account.
+    m, l, acc = jax.lax.fori_loop(0, cost, kv_block, (m0, l0, a0))
+
+    tile = acc / jnp.maximum(l, 1e-30)[:, None]
+    row_live = jax.lax.broadcasted_iota(jnp.int32, (bq, hd), 0) < ql
+    tile = jnp.where(row_live, tile, 0.0)
+
+    # Idempotent-accumulate: duplicates add whole extra copies of the
+    # same tile, which mult[tid] normalizes out host-side.
+    cur = out_ref[pl.ds(b, 1), pl.ds(h, 1), pl.ds(qs, bq), :]
+    out_ref[pl.ds(b, 1), pl.ds(h, 1), pl.ds(qs, bq), :] = cur + tile[None, None]
+
+
 def run_ws_schedule(
     state: QueueState,
     q,
@@ -237,7 +358,7 @@ def run_ws_schedule(
     mult: Optional[jax.Array] = None,
     interpret: bool = True,
 ) -> WSRunResult:
-    """Launch the megakernel over a prepared :class:`QueueState`.
+    """Launch the attention megakernel over a prepared :class:`QueueState`.
 
     ``q``: [B, H, Sq, hd] with Sq a multiple of ``bq``; ``k``/``v``:
     [B, Hkv, Sk, hd] with Sk a multiple of ``bk``.  ``out``/``mult`` may be
@@ -249,60 +370,11 @@ def run_ws_schedule(
     assert Sq % bq == 0, (Sq, bq)
     assert Sk % bk == 0, (Sk, bk)
     g = H // Hkv
-    P = state.n_programs
-    rounds = default_rounds(state, steal) if rounds is None else rounds
-
-    n_tasks = max(1, state.n_tasks)
     out = jnp.zeros((B, H, Sq, hd), jnp.float32) if out is None else out
-    mult = jnp.zeros((n_tasks,), jnp.int32) if mult is None else mult
-    clock = jnp.zeros((P,), jnp.int32)
-    work = jnp.zeros((P,), jnp.int32)
-    steals = jnp.zeros((P,), jnp.int32)
-
-    kernel = functools.partial(
-        _ws_kernel,
-        n_programs=P,
-        n_queues=state.n_queues,
-        capacity=state.capacity,
-        bq=bq,
-        bk=bk,
-        causal=causal,
-        steal=steal,
-        scale=hd**-0.5,
-        g=g,
+    execute = functools.partial(
+        _attention_execute, bq=bq, bk=bk, causal=causal, scale=hd**-0.5, g=g
     )
-
-    def full(a):
-        return pl.BlockSpec(a.shape, lambda r, p, nd=a.ndim: (0,) * nd)
-
-    mutable = [
-        jnp.asarray(state.head),
-        jnp.asarray(state.local_head),
-        jnp.asarray(state.taken),
-        clock,
-        work,
-        steals,
-        jnp.asarray(mult),
-        jnp.asarray(out),
-    ]
-    pure = [jnp.asarray(state.tasks), q, k, v]
-    outs = pl.pallas_call(
-        kernel,
-        grid=(rounds, P),
-        in_specs=[full(a) for a in mutable] + [full(a) for a in pure],
-        out_specs=[full(a) for a in mutable],
-        out_shape=[jax.ShapeDtypeStruct(a.shape, a.dtype) for a in mutable],
-        input_output_aliases={i: i for i in range(len(mutable))},
-        interpret=interpret,
-    )(*mutable, *pure)
-    head, local_head, taken, clock, work, steals, mult, out = outs
-    return WSRunResult(
-        out=out,
-        head=np.asarray(head),
-        local_head=np.asarray(local_head),
-        taken=np.asarray(taken),
-        clock=np.asarray(clock),
-        work=np.asarray(work),
-        steals=np.asarray(steals),
-        mult=np.asarray(mult),
+    return launch_ws_grid(
+        state, execute, (q, k, v), out,
+        steal=steal, rounds=rounds, mult=mult, interpret=interpret,
     )

@@ -64,18 +64,19 @@ class QueueState:
 
 
 def partition_tasks(
-    tasks: Sequence[TileTask], n_queues: int, partition: str = "batch"
+    tasks: Sequence[TileTask], n_queues: int, partition: str = "owner"
 ) -> List[List[TileTask]]:
     """Assign tasks to owner queues.
 
-    * ``"batch"``     — queue ``b % n_queues``: all tiles of a sequence land on
-      one queue, the natural ragged-serving placement and the one that
-      produces the skew the thieves then erase.
+    * ``"owner"`` (alias ``"batch"``) — queue ``task.owner % n_queues``: all
+      tiles of one logical owner (a sequence's batch row for attention, an
+      expert for MoE dispatch) land on one queue — the natural placement and
+      the one that produces the skew the thieves then erase.
     * ``"round_robin"`` — task-index striping (near-balanced baseline).
     """
     buckets: List[List[TileTask]] = [[] for _ in range(n_queues)]
     for i, t in enumerate(tasks):
-        q = (t.b if partition == "batch" else i) % n_queues
+        q = (t.owner if partition in ("owner", "batch") else i) % n_queues
         buckets[q].append(t)
     return buckets
 

@@ -5,9 +5,13 @@ Two layers:
 * ContinuousBatcher — the device side: a fixed pool of B decode slots over
   stacked KV caches.  Admitting a request runs a batch-1 prefill and splices
   its caches into the slot (dynamic_update_slice on the batch dim); every
-  engine step decodes all live slots in one jitted decode_step; finished
-  slots free immediately and are refilled the same step (the vLLM-style
-  iteration-level scheduling, in JAX).
+  engine step decodes all live slots in one decode step — by default
+  `decode_step_ws`, which schedules the slots' ragged attention (and, with
+  `cfg.moe_dispatch == "ws"`, the expert FFN) as tile tasks on the
+  fence-free work-stealing megakernel; `use_ws=False` falls back to the
+  jitted dense decode_step.  Finished slots free immediately and are
+  refilled the same step (the vLLM-style iteration-level scheduling, in
+  JAX).
 
 * WorkStealingFrontend — the host side: per-engine-replica request queues
   implemented with the *literal* WS-WMULT algorithm (paper Fig. 7).  Each
@@ -30,7 +34,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import EMPTY, WSWMult
-from repro.models import Caches, decode_step, init_caches, prefill
+from repro.models import (
+    Caches,
+    decode_step,
+    decode_step_ws,
+    init_caches,
+    prefill,
+    ws_decode_supported,
+)
 
 
 @dataclass
@@ -50,7 +61,8 @@ class ContinuousBatcher:
         slots: int,
         capacity: int,
         greedy: bool = True,
-        attn_schedule: str = "static",
+        attn_schedule: str = "ws",
+        use_ws: bool = True,
     ):
         self.params, self.cfg = params, cfg
         self.B, self.cap = slots, capacity
@@ -59,14 +71,23 @@ class ContinuousBatcher:
         self.pos = np.zeros(slots, dtype=np.int32)  # next write slot per seq
         self.budget = np.zeros(slots, dtype=np.int32)
         self.greedy = greedy
-        # Consulted by `ragged_slot_attention` when given this batcher; the
-        # jitted decode_step path is NOT redirected (the model's attention
-        # is baked into decode_step — routing it through pallas_ws is the
-        # next integration step, see ROADMAP).
+        # Decode attention schedule: with `use_ws` (the default, for the
+        # architectures decode_step_ws covers) every engine step routes the
+        # slots' ragged lengths through the repro.pallas_ws scheduler
+        # ("ws" steals, "static" drains owner queues).  `use_ws=False` is
+        # the escape hatch back to the jitted dense decode_step.
+        if attn_schedule not in ("ws", "static"):
+            raise ValueError(f"attn_schedule must be 'ws' or 'static': {attn_schedule!r}")
         self.attn_schedule = attn_schedule
-        self._decode = jax.jit(
-            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos)
-        )
+        self.use_ws = bool(use_ws and ws_decode_supported(cfg))
+        if self.use_ws:
+            self._decode = lambda p, c, t, pos: decode_step_ws(
+                p, cfg, c, t, pos, schedule=attn_schedule
+            )
+        else:
+            self._decode = jax.jit(
+                lambda p, c, t, pos: decode_step(p, cfg, c, t, pos)
+            )
         self._prefill = jax.jit(
             lambda p, b, cap=capacity: prefill(p, cfg, b, capacity=cap)
         )
@@ -166,6 +187,12 @@ class WorkStealingFrontend:
         self.steal = steal
         self.completed: Dict[int, Request] = {}
         self.stats = {"admitted": 0, "stolen": 0, "dup_completed": 0}
+        # Per-replica rotating victim cursor: scanning victims from a fixed
+        # origin (always replica 0 first) starves high-index replicas under
+        # contention — every thief drains the low queues before ever looking
+        # at the high ones.  Each successful or failed scan advances the
+        # cursor so steal pressure spreads over all victims.
+        self._victim_rr = [0] * n_replicas
         self._lock = threading.Lock()
 
     def submit(self, replica: int, req: Request):
@@ -175,14 +202,18 @@ class WorkStealingFrontend:
         req = self.queues[replica].take()
         if req is not EMPTY:
             return req
-        if self.steal:
-            for v in range(len(self.queues)):
-                if v == replica:
-                    continue
+        if self.steal and len(self.queues) > 1:
+            victims = [v for v in range(len(self.queues)) if v != replica]
+            start = self._victim_rr[replica] % len(victims)
+            for j in range(len(victims)):
+                v = victims[(start + j) % len(victims)]
                 got = self.queues[v].steal(pid=1 + replica)
                 if got is not EMPTY:
+                    # resume past this victim next time
+                    self._victim_rr[replica] = (start + j + 1) % len(victims)
                     self.stats["stolen"] += 1
                     return got
+            self._victim_rr[replica] = (start + 1) % len(victims)
         return None
 
     def run(self, max_iters: int = 10_000) -> Dict[int, Request]:

@@ -14,7 +14,7 @@ from repro.core.simulator import ExactFIFOOracle, ExactLIFOOracle, run_sequentia
 
 FIFO_ALGOS = [
     "ws-mult", "ws-wmult", "b-ws-mult", "b-ws-wmult", "exact-ws",
-    "idempotent-fifo", "pallas-ws",
+    "idempotent-fifo", "pallas-ws", "moe-ws",
 ]
 DEQUE_ALGOS = ["chase-lev", "the-cilk", "idempotent-deque"]
 LIFO_ALGOS = ["idempotent-lifo"]

@@ -1,0 +1,327 @@
+"""Tests for repro.moe_ws — dropless MoE expert dispatch on the WS scheduler.
+
+Five layers:
+  1. dispatch: router output -> expert-tile tasks covers every routed
+     (token, expert) pair exactly once, grouped contiguously per expert;
+  2. `moe_ffn_ws` matches the dense **no-drop** oracle for both schedules,
+     with the aux loss identical to the dense router's;
+  3. multiplicity on-device: adversarially rewound queue state re-executes
+     expert tiles and the row divisor normalizes the combine back to exact;
+  4. dropless vs dropping: a hot-expert router makes the dense capacity path
+     lose tokens while the ws path still equals the no-drop oracle;
+  5. protocol: the expert dispatch queue (`moe-ws` in ALGORITHMS) satisfies
+     the paper's properties under the adversarial simulator, and its
+     instruction mix is fence-free (0 RMW / 0 locks) — plus a hypothesis
+     property test that the dropless invariant survives any random
+     steal/duplication (head-rewind) schedule.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core import ALGORITHMS, EMPTY  # noqa: E402
+from repro.core.simulator import (  # noqa: E402
+    check_no_lost_tasks_fifo,
+    check_no_process_duplicates,
+    check_owner_fifo,
+    run_program,
+)
+from repro.models.moe import init_moe, moe_ffn, moe_ffn_dispatch  # noqa: E402
+from repro.moe_ws import (  # noqa: E402
+    MoEDispatchHost,
+    combine_routed,
+    expert_ffn_nodrop_ref,
+    moe_ffn_nodrop_ref,
+    moe_ffn_ws,
+    route_to_tasks,
+    run_moe_schedule,
+)
+from repro.pallas_ws import ExpertTask, make_queue_state  # noqa: E402
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _smoke_cfg(**kw):
+    cfg = get_config("deepseek-v2-236b", smoke=True)
+    return cfg.replace(**kw) if kw else cfg
+
+
+def _moe_inputs(cfg, B=2, S=16, seed=0):
+    p = init_moe(jax.random.PRNGKey(seed), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, S, cfg.d_model))
+    return p, x
+
+
+# ---------------------------------------------------------------------------
+# 1. dispatch: routing -> tasks
+# ---------------------------------------------------------------------------
+
+
+def test_route_to_tasks_covers_every_routed_pair():
+    rng = np.random.RandomState(0)
+    T, E, k, bt = 13, 5, 2, 4
+    idx = np.stack([rng.choice(E, k, replace=False) for _ in range(T)])
+    gates = rng.uniform(0.1, 1.0, (T, k)).astype(np.float32)
+    tasks, routed = route_to_tasks(idx, gates, E, bt=bt)
+
+    loads = np.bincount(idx.reshape(-1), minlength=E)
+    assert routed.n_routed == T * k
+    np.testing.assert_array_equal(routed.expert_loads(), loads)
+    # expert ranges are bt-aligned (tile output slices must be disjoint even
+    # when a full bt-row slice is written)
+    assert (np.diff(routed.expert_off) == -(-loads // bt) * bt).all()
+    assert routed.n_rows % bt == 0
+
+    # live rows: the first loads[e] rows of each expert's range, each in
+    # exactly one tile; pad rows in none, with gate 0
+    live = np.zeros(routed.n_rows, dtype=bool)
+    for e in range(E):
+        live[routed.expert_off[e]: routed.expert_off[e] + loads[e]] = True
+    covered = np.zeros(routed.n_rows, dtype=int)
+    for t in tasks:
+        assert t.cost == t.row_len <= bt
+        assert t.op == ExpertTask(0, 0, 1, 0, 1).op
+        assert t.row_start % bt == 0
+        lo, hi = routed.expert_off[t.expert], routed.expert_off[t.expert + 1]
+        assert lo <= t.row_start and t.row_start + t.row_len <= hi
+        # the full bt slice this tile RMWs stays inside its expert's range
+        assert t.row_start + bt <= hi
+        covered[t.row_start: t.row_start + t.row_len] += 1
+    assert (covered[live] == 1).all(), "dropless: every routed row in one tile"
+    assert (covered[~live] == 0).all() and (routed.gates[~live] == 0).all()
+    assert live.sum() == T * k
+    # every live row's token index is consistent with the routing
+    for r in np.flatnonzero(live):
+        e = int(np.searchsorted(routed.expert_off, r, side="right")) - 1
+        assert e in idx[routed.tok_idx[r]]
+
+
+def test_route_to_tasks_empty_expert_gets_no_tasks():
+    idx = np.zeros((4, 1), dtype=np.int32)  # everything to expert 0
+    gates = np.ones((4, 1), dtype=np.float32)
+    tasks, routed = route_to_tasks(idx, gates, n_experts=3, bt=2)
+    assert routed.expert_loads().tolist() == [4, 0, 0]
+    assert {t.expert for t in tasks} == {0}
+    assert sum(t.row_len for t in tasks) == 4
+
+
+# ---------------------------------------------------------------------------
+# 2. moe_ffn_ws == dense no-drop oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("schedule", ["ws", "static"])
+def test_moe_ffn_ws_matches_nodrop_oracle(schedule):
+    cfg = _smoke_cfg()
+    p, x = _moe_inputs(cfg)
+    ref, aux_ref = moe_ffn_nodrop_ref(x, p, cfg)
+    y, aux, st = moe_ffn_ws(
+        x, p, cfg, schedule=schedule, n_programs=4, bt=4, return_stats=True
+    )
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5, atol=1e-5)
+    assert float(jnp.abs(aux - aux_ref)) < 1e-6
+    # single launch in interpret mode is sequentially-exact: no duplicates
+    assert st.mult_max == 1
+    # the dense router must agree on the aux loss (same formula, same groups)
+    _, aux_dense = moe_ffn(x, p, cfg, group_size=x.shape[0] * x.shape[1])
+    assert float(jnp.abs(aux - aux_dense)) < 1e-6
+
+
+def test_moe_ffn_ws_no_shared_experts():
+    cfg = _smoke_cfg(n_shared_experts=0)
+    p, x = _moe_inputs(cfg, seed=3)
+    ref, _ = moe_ffn_nodrop_ref(x, p, cfg)
+    y, _ = moe_ffn_ws(x, p, cfg, n_programs=4, bt=4)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_moe_dispatch_flag_eager_and_traced():
+    """cfg.moe_dispatch == "ws": eager callers get the dropless scheduler,
+    traced callers fall back to the dense path instead of crashing."""
+    cfg = _smoke_cfg(moe_dispatch="ws")
+    p, x = _moe_inputs(cfg, seed=5)
+    ref, _ = moe_ffn_nodrop_ref(x, p, cfg)
+    y, _ = moe_ffn_dispatch(x, p, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+    y_tr, _ = jax.jit(lambda xx: moe_ffn_dispatch(xx, p, cfg))(x)
+    y_dense, _ = moe_ffn(x, p, cfg)
+    np.testing.assert_allclose(
+        np.asarray(y_tr), np.asarray(y_dense), rtol=1e-5, atol=1e-5
+    )
+
+    with pytest.raises(TypeError, match="concrete routing"):
+        jax.jit(lambda xx: moe_ffn_ws(xx, p, cfg))(x)
+
+
+# ---------------------------------------------------------------------------
+# 3. multiplicity: duplicated expert tiles are count-normalized
+# ---------------------------------------------------------------------------
+
+
+def _routed_kernel_setup(T=12, d=8, f=16, E=4, k=2, bt=4, seed=0, n_programs=4):
+    rng = np.random.RandomState(seed)
+    idx = np.stack([rng.choice(E, k, replace=False) for _ in range(T)])
+    gates = rng.uniform(0.1, 1.0, (T, k)).astype(np.float32)
+    gates /= gates.sum(1, keepdims=True)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (T, d), jnp.float32)
+    wg = jax.random.normal(ks[1], (E, d, f), jnp.float32) / np.sqrt(d)
+    wu = jax.random.normal(ks[2], (E, d, f), jnp.float32) / np.sqrt(d)
+    wd = jax.random.normal(ks[3], (E, f, d), jnp.float32) / np.sqrt(f)
+    tasks, routed = route_to_tasks(idx, gates, E, bt=bt)
+    state = make_queue_state(tasks, n_programs, n_queues=E, partition="owner")
+    return idx, gates, x, (wg, wu, wd), tasks, routed, state
+
+
+def test_expert_multiplicity_normalization_under_head_rewind():
+    """Relaunch the expert megakernel on adversarially rewound queue state
+    (every Head dragged to 0, all local bounds wiped).  Every tile is
+    re-executed; mult == 2 everywhere and the combine stays exact."""
+    idx, gates, x, w, tasks, routed, state = _routed_kernel_setup()
+    bt = 4
+    res1 = run_moe_schedule(state, x, routed.tok_idx, *w, bt=bt, steal=True)
+    assert (res1.mult[: state.n_tasks] == 1).all()
+
+    state.head = np.zeros_like(state.head)
+    state.local_head = np.zeros_like(state.local_head)
+    res2 = run_moe_schedule(
+        state, x, routed.tok_idx, *w, bt=bt, steal=True,
+        out=res1.out, mult=jnp.asarray(res1.mult),
+    )
+    assert (res2.mult[: state.n_tasks] == 2).all(), "every tile re-executed once"
+
+    y = combine_routed(routed, tasks, res2)
+    ref = expert_ffn_nodrop_ref(idx, gates, x, *w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_expert_no_program_re_extracts_within_launch():
+    idx, gates, x, w, tasks, routed, state = _routed_kernel_setup(seed=2)
+    res = run_moe_schedule(state, x, routed.tok_idx, *w, bt=4, steal=True)
+    live = state.tasks[:, :, 0] != -1
+    assert (res.taken[live] >= 0).all(), "every live slot extracted"
+    assert (res.taken[~live] == -1).all(), "no phantom extraction"
+    assert (res.mult[: state.n_tasks] == 1).all()
+    np.testing.assert_array_equal(res.head, live.sum(axis=1))
+
+
+# ---------------------------------------------------------------------------
+# 4. dropless vs dropping
+# ---------------------------------------------------------------------------
+
+
+def test_ws_is_dropless_where_dense_drops():
+    """A hot-expert router: the dense capacity path loses routed tokens
+    (its output diverges from the no-drop oracle) while the ws dispatch
+    still reproduces the oracle exactly."""
+    cfg = _smoke_cfg(capacity_factor=1.0, n_shared_experts=0)
+    p, x = _moe_inputs(cfg, B=2, S=16, seed=7)
+    # bias the router hard toward expert 0: it gets every token's top-1
+    p = dict(p)
+    p["router"] = jnp.asarray(np.asarray(p["router"]) * 0.05)
+    p["router"] = p["router"].at[:, 0].add(10.0)
+
+    ref, _ = moe_ffn_nodrop_ref(x, p, cfg)
+    y_ws, _, st = moe_ffn_ws(x, p, cfg, n_programs=4, bt=4, return_stats=True)
+    y_dense, _ = moe_ffn(x, p, cfg, group_size=x.shape[0] * x.shape[1])
+
+    np.testing.assert_allclose(np.asarray(y_ws), np.asarray(ref), rtol=1e-5, atol=1e-5)
+    dense_err = float(jnp.abs(y_dense.astype(jnp.float32) - ref).max())
+    assert dense_err > 1e-3, (
+        f"expected the capacity path to drop tokens here (err={dense_err})"
+    )
+    # the hot expert's queue was drained by thieves, not serialized
+    assert st.steals > 0
+
+
+# ---------------------------------------------------------------------------
+# 5. protocol: property harness, instruction mix, hypothesis invariant
+# ---------------------------------------------------------------------------
+
+
+def _expert_payload(i):
+    return tuple(int(v) for v in ExpertTask(
+        expert=i % 8, row_start=4 * i, row_len=4, tid=i, cost=4
+    ).encode())
+
+
+def _program(n_tasks, n_thieves, steals_per_thief, takes):
+    prog = {0: [("put", _expert_payload(i)) for i in range(n_tasks)]
+            + [("take", None)] * takes}
+    for t in range(1, n_thieves + 1):
+        prog[t] = [("steal", None)] * steals_per_thief
+    return prog
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_moe_host_weak_multiplicity_random_schedules(seed):
+    rng = random.Random(seed)
+    schedule = [rng.randrange(4) for _ in range(rng.randrange(50, 400))]
+    prog = _program(n_tasks=8, n_thieves=3, steals_per_thief=5, takes=5)
+    records = run_program(
+        lambda backend: MoEDispatchHost(backend=backend, capacity=64), prog, schedule
+    )
+    check_no_process_duplicates(records)  # no process extracts a tile twice
+    check_no_lost_tasks_fifo(records)     # at-least-once (dropless), FIFO prefix
+    check_owner_fifo(records)             # owner respects put order
+
+
+def test_moe_host_registered_in_core_registry():
+    q = ALGORITHMS["moe-ws"]()
+    payloads = [_expert_payload(i) for i in range(16)]
+    for t in payloads:
+        assert q.put(t)
+    assert [q.take() for _ in range(8)] == payloads[:8]
+    assert [q.steal(1) for _ in range(8)] == payloads[8:]
+    assert q.take() is EMPTY and q.steal(2) is EMPTY
+
+
+def test_expert_dispatch_instruction_mix_is_fence_free():
+    """The zero-cost audit inline: Put/Take and Put/Steal on the expert
+    dispatch queue perform zero RMW operations and zero lock acquisitions."""
+    from benchmarks.zero_cost import audit_fence_free, bench_zero_cost
+
+    rows = bench_zero_cost(n_ops=512, algos=("moe-ws", "pallas-ws"), repeats=1)
+    audit_fence_free(rows)
+    for r in rows:
+        assert r["extracted"] == 512
+
+
+# ---------------------------------------------------------------------------
+# deterministic slice of the hypothesis dropless property (always runs; the
+# randomized version lives in test_moe_ws_properties.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_dropless_invariant_seeded_rewinds(seed):
+    """Seeded adversarial rewind schedules: every routed pair executed >= 1
+    time and the normalized combine equals the no-drop reference."""
+    rng = np.random.RandomState(seed)
+    idx, gates, x, w, tasks, routed, state = _routed_kernel_setup(
+        T=4 + 3 * seed, E=3 + (seed % 2), k=1 + (seed % 2), bt=2, seed=seed,
+        n_programs=3,
+    )
+    res = run_moe_schedule(state, x, routed.tok_idx, *w, bt=2, steal=True)
+    for _ in range(1 + seed % 2):
+        for q in range(state.n_queues):
+            if rng.rand() < 0.5:
+                state.head[q] = rng.randint(0, max(1, state.head[q] + 1))
+        for pidx in range(state.local_head.shape[0]):
+            if rng.rand() < 0.5:
+                state.local_head[pidx] = 0
+        res = run_moe_schedule(
+            state, x, routed.tok_idx, *w, bt=2, steal=True,
+            out=res.out, mult=jnp.asarray(res.mult),
+        )
+    assert (res.mult[: state.n_tasks] >= 1).all()
+    y = combine_routed(routed, tasks, res)
+    ref = expert_ffn_nodrop_ref(idx, gates, x, *w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-4, atol=1e-4)

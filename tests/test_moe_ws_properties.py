@@ -1,0 +1,76 @@
+"""Hypothesis property: the dropless invariant of repro.moe_ws.
+
+For ANY routing and ANY adversarial steal/duplication schedule — random
+stale-Head rewinds and wiped per-program bounds between megakernel launches,
+the device analogue of the paper's §7 interleavings — every routed
+(token, expert) pair is executed at least once and the multiplicity-
+normalized combine equals the dense no-drop reference within tolerance.
+
+Separate module: hypothesis is an optional dev dependency (CI installs it;
+bare environments skip this file, mirroring test_core_properties.py).
+"""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+pytest.importorskip("hypothesis")
+
+import jax.numpy as jnp  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.moe_ws import (  # noqa: E402
+    combine_routed,
+    expert_ffn_nodrop_ref,
+    route_to_tasks,
+    run_moe_schedule,
+)
+from repro.pallas_ws import make_queue_state  # noqa: E402
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_dropless_invariant_any_adversarial_schedule(data):
+    E = data.draw(st.integers(2, 5), label="E")
+    T = data.draw(st.integers(1, 10), label="T")
+    k = data.draw(st.integers(1, min(2, E)), label="k")
+    bt = data.draw(st.sampled_from([2, 4]), label="bt")
+    seed = data.draw(st.integers(0, 2**16), label="seed")
+
+    rng = np.random.RandomState(seed)
+    idx = np.stack([rng.choice(E, k, replace=False) for _ in range(T)])
+    gates = rng.uniform(0.1, 1.0, (T, k)).astype(np.float32)
+    gates /= gates.sum(1, keepdims=True)
+    d, f = 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed % 997), 4)
+    x = jax.random.normal(ks[0], (T, d), jnp.float32)
+    w = (
+        jax.random.normal(ks[1], (E, d, f), jnp.float32) / 2.0,
+        jax.random.normal(ks[2], (E, d, f), jnp.float32) / 2.0,
+        jax.random.normal(ks[3], (E, f, d), jnp.float32) / 2.0,
+    )
+    tasks, routed = route_to_tasks(idx, gates, E, bt=bt)
+    state = make_queue_state(tasks, n_programs=3, n_queues=E, partition="owner")
+
+    res = run_moe_schedule(state, x, routed.tok_idx, *w, bt=bt, steal=True)
+    n_relaunches = data.draw(st.integers(1, 2), label="relaunches")
+    for _ in range(n_relaunches):
+        # adversarial staleness: rewind a random subset of shared heads to a
+        # random earlier value and wipe a random subset of local bounds —
+        # the worst §7-style interleaving the protocol admits
+        for q in range(state.n_queues):
+            if data.draw(st.booleans(), label=f"rewind_q{q}"):
+                state.head[q] = rng.randint(0, max(1, state.head[q] + 1))
+        for pidx in range(state.local_head.shape[0]):
+            if data.draw(st.booleans(), label=f"wipe_p{pidx}"):
+                state.local_head[pidx] = 0
+        res = run_moe_schedule(
+            state, x, routed.tok_idx, *w, bt=bt, steal=True,
+            out=res.out, mult=jnp.asarray(res.mult),
+        )
+
+    mult = res.mult[: state.n_tasks]
+    assert (mult >= 1).all(), "dropless: every expert tile executed at least once"
+    y = combine_routed(routed, tasks, res)
+    ref = expert_ffn_nodrop_ref(idx, gates, x, *w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-4, atol=1e-4)

@@ -109,6 +109,39 @@ def test_idle_replica_steals_backlogged_queue():
     assert f.stats["stolen"] > 0, "replica 1 should have stolen from replica 0"
 
 
+def test_victim_selection_rotates_instead_of_scanning_from_zero():
+    """Regression: _next_request used to scan victims from replica 0 every
+    time, so a thief drained the lowest-index backlogged queue completely
+    before ever visiting a higher one — high-index replicas starved under
+    contention.  With the rotating cursor, consecutive steals alternate
+    between backlogged victims."""
+    f = _frontend(n_replicas=3)
+    # queue 1 holds two requests, queue 2 holds one; replica 0 is the thief
+    f.submit(1, Request(rid=10, tokens=np.array([1], dtype=np.int32)))
+    f.submit(1, Request(rid=11, tokens=np.array([1], dtype=np.int32)))
+    f.submit(2, Request(rid=20, tokens=np.array([2], dtype=np.int32)))
+
+    got = [f._next_request(0).rid for _ in range(3)]
+    assert f.stats["stolen"] == 3
+    # old behavior: [10, 11, 20] (queue 2 starved until queue 1 drained);
+    # rotation must visit queue 2 before finishing queue 1
+    assert got.index(20) < 2, f"queue 2 starved: steal order {got}"
+    assert sorted(got) == [10, 11, 20]
+    assert f._next_request(0) is None
+
+
+def test_victim_rotation_covers_all_queues_when_some_are_empty():
+    """The rotating cursor must not skip a backlogged victim just because the
+    cursor points at an empty queue."""
+    f = _frontend(n_replicas=4)
+    f.submit(3, Request(rid=30, tokens=np.array([3], dtype=np.int32)))
+    for _ in range(3):  # advance the cursor past failures and wrap
+        got = f._next_request(0)
+        assert got is not None and got.rid == 30
+        f.submit(3, Request(rid=30, tokens=np.array([3], dtype=np.int32)))
+    assert f.stats["stolen"] == 3
+
+
 def test_ragged_slot_attention_matches_oracle():
     """The continuous-batching hook: ragged per-slot lengths routed through
     the device-resident ws scheduler equal the dense masked oracle."""

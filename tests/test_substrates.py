@@ -205,6 +205,46 @@ def test_continuous_batcher_matches_sequential_decode():
         assert rr.out == got.out, (rr.out, got.out)
 
 
+def test_ws_decode_step_matches_dense_decode_step():
+    """The batcher's default decode path (attention tiles through the
+    repro.pallas_ws scheduler) must reproduce the jitted dense decode_step:
+    same logits, same cache contents, per-slot heterogeneous positions."""
+    from repro.models import decode_step, decode_step_ws, prefill
+
+    cfg = get_config("llama3.2-3b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.asarray(np.array([[5, 6, 7, 8], [9, 8, 7, 6]], np.int32))}
+    _, caches = prefill(params, cfg, batch, capacity=32)
+    tok = jnp.asarray(np.array([[3], [4]], np.int32))
+    pos = jnp.asarray(np.array([4, 2], np.int32))  # heterogeneous slots
+    l_dense, c_dense = decode_step(params, cfg, caches, tok, pos)
+    l_ws, c_ws = decode_step_ws(params, cfg, caches, tok, pos)
+    np.testing.assert_allclose(
+        np.asarray(l_dense), np.asarray(l_ws), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(c_dense.kv.k), np.asarray(c_ws.kv.k), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_batcher_ws_escape_hatch_matches_default():
+    """use_ws=False (jitted dense decode) and the default ws decode produce
+    the same greedy token streams."""
+    cfg = get_config("llama3.2-3b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    outs = {}
+    for use_ws in (True, False):
+        b = ContinuousBatcher(params, cfg, slots=2, capacity=32, use_ws=use_ws)
+        assert b.use_ws == use_ws
+        r1 = Request(1, np.array([5, 6, 7], np.int32), max_new=3)
+        r2 = Request(2, np.array([9, 8, 7, 6, 5], np.int32), max_new=3)
+        assert b.admit(r1) and b.admit(r2)
+        while b.n_live:
+            b.step()
+        outs[use_ws] = (r1.out, r2.out)
+    assert outs[True] == outs[False], outs
+
+
 def test_work_stealing_frontend_completes_all():
     cfg = get_config("llama3.2-3b", smoke=True)
     params = init_params(jax.random.PRNGKey(0), cfg)
