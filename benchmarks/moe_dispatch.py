@@ -173,11 +173,21 @@ def main(argv=None):
             f"{row['ws']['mult_max']},{row['ws']['max_abs_err']:.2e}"
         )
 
+    # traced-Put audit: the jit-compatible queue construction must lower to
+    # plain tensor ops — 0 RMW / 0 locks / 0 fences on Put, Take AND Steal
+    # (asserts internally; the rows land in the payload as the record)
+    try:
+        from benchmarks.zero_cost import audit_traced_put
+    except ModuleNotFoundError:  # run as a bare script: python benchmarks/...
+        sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))
+        from benchmarks.zero_cost import audit_traced_put
+
     payload = dict(
         bench="moe_dispatch",
         config=dict(T=T, d=d, f=f, E=E, k=k, n_programs=P, bt=bt,
                     capacity_factor=cf, dry_run=args.dry_run),
         rows=rows,
+        traced_put_audit=audit_traced_put(),
     )
     pathlib.Path(args.out).write_text(json.dumps(payload, indent=2))
     print(f"[moe_dispatch] wrote {args.out}")

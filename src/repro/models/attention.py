@@ -406,8 +406,10 @@ def gqa_decode_ws(x, p, cfg, cache: KVCache, pos, *, schedule="ws", bk=64,
     dense contraction is replaced by ragged decode tiles over the *live*
     per-slot lengths ``pos_b + 1`` — short slots stop at their length
     instead of sweeping the padded cache, and thieves drain the long slot's
-    queue.  Full attention only (window == 0); positions must be concrete
-    (eager serving path).
+    queue.  Full attention only (window == 0).  Traced positions (the
+    jitted serving path) route through the fixed-shape traced Put inside
+    ``ragged_decode_attention``; concrete positions keep the host-side Put
+    with its scheduling telemetry.
     """
     from repro.pallas_ws.ragged import ragged_decode_attention
 
@@ -417,7 +419,10 @@ def gqa_decode_ws(x, p, cfg, cache: KVCache, pos, *, schedule="ws", bk=64,
     pos_b = broadcast_pos(pos, B)
     q, new_cache = _decode_qkv(x, p, cfg, cache, pos_b)
 
-    lengths = np.asarray(jax.device_get(pos_b)).astype(np.int64) + 1
+    if isinstance(pos_b, jax.core.Tracer):
+        lengths = pos_b.astype(jnp.int32) + 1
+    else:
+        lengths = np.asarray(jax.device_get(pos_b)).astype(np.int64) + 1
     o = ragged_decode_attention(
         q.reshape(B, H, hd),
         new_cache.k.transpose(0, 2, 1, 3),  # [B, S, Hkv, hd] -> [B, Hkv, S, hd]

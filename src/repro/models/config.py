@@ -48,8 +48,10 @@ class ModelConfig:
     first_k_dense: int = 0  # leading dense layers (deepseek-v2: 1)
     capacity_factor: float = 1.25
     # "dense" = capacity-dropping dispatch/combine einsums; "ws" = dropless
-    # expert tiles through the repro.moe_ws work-stealing scheduler (eager
-    # paths only — traced code falls back to dense, see moe_ffn_dispatch)
+    # expert tiles through the repro.moe_ws work-stealing scheduler, eager
+    # AND traced (jit/scan build queues with the traced Put) — dense never
+    # substitutes silently, see moe_ffn_dispatch.  "ws" is forward-only
+    # (inference/serving); differentiated training steps need "dense".
     moe_dispatch: str = "dense"
 
     # -- SSM (mamba2 / zamba2) -------------------------------------------------

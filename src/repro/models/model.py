@@ -371,11 +371,15 @@ def decode_step_ws(
     contraction baked into :func:`decode_step`.
 
     Same signature and semantics as :func:`decode_step` (``pos`` may be [B]
-    for continuous batching's heterogeneous slots), but eager: per-slot
-    lengths must be concrete to build the tile queues, so the layer loop is
-    a plain Python loop over the stacked params.  MoE layers route through
-    ``moe_ffn_dispatch`` — with ``cfg.moe_dispatch == "ws"`` both the
-    attention *and* the expert FFN of a decode step run on the scheduler.
+    for continuous batching's heterogeneous slots).  Jit-compatible: under
+    tracing the per-slot lengths stay on device and the tile queues are
+    built by the traced Put (``make_queue_state_jax``); eager calls keep
+    the host-side Put with its telemetry.  The layer loop is a plain Python
+    loop over the stacked params (statically unrolled when traced — see
+    ``repro.serving.engine.jit_decode_step_ws`` for the compiled serving
+    entry).  MoE layers route through ``moe_ffn_dispatch`` — with
+    ``cfg.moe_dispatch == "ws"`` both the attention *and* the expert FFN of
+    a decode step run on the scheduler, eager or compiled.
     """
     assert ws_decode_supported(cfg), cfg.name
     x = _embed(params, cfg, tokens)

@@ -120,17 +120,16 @@ def moe_ffn(x, p, cfg, group_size: int = 1024):
 
 def moe_ffn_dispatch(x, p, cfg, group_size: int = 1024):
     """Route through the cfg-selected dispatch: ``cfg.moe_dispatch == "ws"``
-    runs the dropless work-stealing path (repro.moe_ws), everything else the
-    dense dropping path.
+    runs the dropless work-stealing path (repro.moe_ws), the explicit
+    default ``"dense"`` the capacity-dropping einsum path.
 
-    The ws dispatch builds task queues from *concrete* routing, so inside
-    ``jit``/``scan`` tracing (where x is a tracer) it falls back to the dense
-    path — eager callers (serving decode, benchmarks) get the dropless
-    scheduler, traced training steps keep the static dispatch.
+    ``"ws"`` holds for eager AND traced callers: ``moe_ffn_ws`` builds its
+    queues with the traced Put under ``jit``/``scan`` (fixed worst-case
+    shapes, see repro.moe_ws.dispatch), so the capacity-dropping dense path
+    can never silently substitute inside a compiled step — it runs only
+    when the config asks for it by name.
     """
-    if getattr(cfg, "moe_dispatch", "dense") == "ws" and not isinstance(
-        x, jax.core.Tracer
-    ):
+    if getattr(cfg, "moe_dispatch", "dense") == "ws":
         from repro.moe_ws import moe_ffn_ws
 
         return moe_ffn_ws(x, p, cfg, group_size)

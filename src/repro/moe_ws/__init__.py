@@ -19,7 +19,11 @@ never pay the jax import.
 _EXPORTS = {
     "MoEDispatchHost": "dispatch",
     "RoutedSet": "dispatch",
+    "divisor_from_tiles": "dispatch",
+    "expert_queue_candidates": "dispatch",
+    "expert_rounds_bound": "dispatch",
     "route_to_tasks": "dispatch",
+    "route_to_tasks_jax": "dispatch",
     "row_divisor": "dispatch",
     "run_moe_schedule": "expert_kernel",
     "DispatchStats": "layer",

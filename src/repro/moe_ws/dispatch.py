@@ -23,6 +23,20 @@ the dispatch is **dropless** by construction.  Duplicated tile execution
 against :mod:`repro.core` backend cells so the adversarial simulator and the
 instruction-mix audit certify the expert dispatch path like every other
 ``ALGORITHMS`` entry (registered as ``"moe-ws"``).
+
+Two Put implementations, one layout
+-----------------------------------
+:func:`route_to_tasks` is the host-side Put (concrete routing, numpy,
+compact per-expert padding).  :func:`route_to_tasks_jax` is the **traced**
+Put: the same stable-sort grouping expressed as jnp ops over fixed shapes,
+so queue construction works inside ``jit``/``scan``.  Fixed shapes force
+the static worst case — every expert's row range is provisioned at
+``R = ceil(T·k / bt) · bt`` rows (the hottest router could send every
+routed pair to one expert), ``E·R`` rows total, with per-tile live masks
+(``row_len``) marking the real load.  Dead tiles become ⊥ records at queue
+build time, dead rows carry token 0 / gate 0, so the combine is unchanged.
+The two builders are certified equivalent, layout and output, by
+tests/test_dispatch_conformance.py.
 """
 
 from __future__ import annotations
@@ -33,7 +47,11 @@ from typing import List, Sequence, Tuple
 import numpy as np
 
 from repro.pallas_ws.host import PallasWSHost
-from repro.pallas_ws.tasks import ExpertTask
+from repro.pallas_ws.tasks import BOTTOM, OP_EXPERT_TILE, ExpertTask
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
 
 
 @dataclass(frozen=True)
@@ -65,6 +83,36 @@ class RoutedSet:
     def expert_loads(self) -> np.ndarray:
         """Live routed rows per expert — the raw router skew."""
         return self.loads
+
+
+def _routed_flatten(r: "RoutedSet"):
+    return (
+        (r.tok_idx, r.gates, r.expert_off, r.loads),
+        (r.n_rows, r.n_routed, r.n_tokens),
+    )
+
+
+def _routed_unflatten(aux, children):
+    tok_idx, gates, expert_off, loads = children
+    n_rows, n_routed, n_tokens = aux
+    return RoutedSet(tok_idx, gates, expert_off, loads, n_rows, n_routed, n_tokens)
+
+
+_ROUTED_REGISTERED = False
+
+
+def _register_routed_pytree() -> None:
+    """Pytree registration lets a RoutedSet built by route_to_tasks_jax cross
+    jit/scan boundaries (array fields traced, shape fields static).  Lazy so
+    the jax-free consumers of this module (the ``moe-ws`` ALGORITHMS entry,
+    the instruction-mix audit) never pay the jax import."""
+    global _ROUTED_REGISTERED
+    if _ROUTED_REGISTERED:
+        return
+    import jax.tree_util as jtu
+
+    jtu.register_pytree_node(RoutedSet, _routed_flatten, _routed_unflatten)
+    _ROUTED_REGISTERED = True
 
 
 def route_to_tasks(
@@ -123,6 +171,155 @@ def route_to_tasks(
     )
 
 
+def route_to_tasks_jax(idx, gates, n_experts: int, bt: int = 8,
+                       max_expert_load: int | None = None):
+    """Traced twin of :func:`route_to_tasks`: jit-compatible Put.
+
+    Same stable (token, choice)-order grouping by expert — a stable argsort
+    over the ``[T·k]`` routed pairs plus a cumsum rank — but laid out at the
+    **static worst case**: every expert owns exactly
+    ``R = ceil(min(T, T·k)/bt)·bt`` rows starting at ``e·R``, every expert
+    owns ``R/bt`` candidate tiles with static ``tid = e·(R/bt) + i``, and
+    the dynamic router load only moves the live masks.  The default bound
+    is ``T`` rows per expert because top-k routing (``jax.lax.top_k`` in
+    ``router_topk``) picks **distinct** experts per token, so one expert
+    receives at most one pair per token even when the router sends it every
+    token.  Callers feeding routings that may repeat an expert within a
+    token's k choices must pass ``max_expert_load`` (up to ``T·k``) —
+    a load above the provisioned range would silently drop scatters.
+    Returns ``(records [E, R/bt, TASK_WIDTH], live [E, R/bt], RoutedSet)``
+    where the RoutedSet fields are jnp values (``expert_off`` is the static
+    ``e ↦ e·R`` map) — feed the records through
+    :func:`expert_queue_candidates` /
+    :func:`repro.pallas_ws.queues.make_queue_state_jax` to finish the Put.
+
+    Live-mask invariant: within expert ``e``'s range, row ``e·R + j`` is
+    live iff ``j < loads[e]``; tile ``(e, i)`` is live iff ``i·bt <
+    loads[e]`` and carries ``row_len = cost = clip(loads[e] - i·bt, 0,
+    bt)``.  Dead rows point at token 0 with gate 0, dead tiles become ⊥ at
+    queue build, so multiplicity accounting and the combine treat both
+    builders identically.
+    """
+    import jax.numpy as jnp
+
+    _register_routed_pytree()
+    idx = jnp.asarray(idx, jnp.int32)
+    gates = jnp.asarray(gates, jnp.float32)
+    T, k = idx.shape
+    Tk = T * k
+    E = n_experts
+    cap = min(Tk, T if max_expert_load is None else int(max_expert_load))
+    tiles_per_e = _cdiv(cap, bt)     # static
+    R = tiles_per_e * bt             # static rows per expert
+
+    flat_e = idx.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    flat_g = gates.reshape(-1)
+    # stable counting sort by expert: rank of each pair within its expert
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    loads = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(loads)[:-1]]
+    )
+    rank = jnp.arange(Tk, dtype=jnp.int32) - start[sorted_e]
+    dest = sorted_e * R + rank
+    tok_idx = jnp.zeros((E * R,), jnp.int32).at[dest].set(flat_t[order])
+    gate_rows = jnp.zeros((E * R,), jnp.float32).at[dest].set(flat_g[order])
+
+    e_ids = jnp.arange(E, dtype=jnp.int32)[:, None]          # [E, 1]
+    i_ids = jnp.arange(tiles_per_e, dtype=jnp.int32)[None, :]  # [1, R/bt]
+    rl = jnp.clip(loads[:, None] - i_ids * bt, 0, bt)        # live rows/tile
+    live = rl > 0
+    shape = (E, tiles_per_e)
+    records = jnp.stack(
+        [
+            jnp.full(shape, OP_EXPERT_TILE, jnp.int32),
+            jnp.broadcast_to(e_ids, shape),
+            e_ids * R + i_ids * bt,                # row_start
+            rl,                                    # row_len
+            jnp.full(shape, BOTTOM, jnp.int32),
+            jnp.full(shape, BOTTOM, jnp.int32),
+            e_ids * tiles_per_e + i_ids,           # tid (static, unique)
+            rl,                                    # cost = live rows
+        ],
+        axis=-1,
+    )
+    routed = RoutedSet(
+        tok_idx=tok_idx,
+        gates=gate_rows,
+        expert_off=np.arange(E + 1, dtype=np.int32) * R,
+        loads=loads,
+        n_rows=E * R,
+        n_routed=Tk,
+        n_tokens=T,
+    )
+    return records, live, routed
+
+
+def expert_queue_candidates(records, live, n_queues: int):
+    """Owner placement for trace-built expert tiles: expert ``e`` lands on
+    queue ``e % n_queues`` (per-expert queues when ``n_queues == E``, the
+    static baseline's round-robin expert parallelism when ``n_queues ==
+    n_programs``) — same keying as ``partition_tasks(partition="owner")``."""
+    from repro.pallas_ws.queues import owner_queue_candidates
+
+    return owner_queue_candidates(records, live, n_queues)
+
+
+def expert_rounds_bound(
+    n_routed: int, bt: int, n_queues: int, n_programs: int, steal: bool
+) -> int:
+    """Static worst-case lockstep rounds to drain any routing of
+    ``n_routed`` pairs — the trace-time stand-in for
+    :func:`repro.pallas_ws.kernel.default_rounds` (cost unit: routed rows).
+
+    Stealing: Graham's greedy bound on the worst total (every pair live)
+    plus one max-cost tile and the scan slack.  Static: one queue may own
+    every routed row.
+    """
+    if steal:
+        return _cdiv(n_routed, n_programs) + bt + n_queues + 8
+    return n_routed + 8
+
+
+def divisor_from_tiles(row_start, row_len, tile_mult, n_rows: int):
+    """Vectorized per-row multiplicity divisor — the one implementation both
+    Put paths normalize through.
+
+    Each tile owns the disjoint rows ``[row_start[i], row_start[i] +
+    row_len[i])``; those rows get divisor ``max(1, tile_mult[i])``, all
+    other rows 1.  Two forms of ``row_len``:
+
+    * a concrete int array (host path, ragged tail tiles) — the row index
+      set is built with ``np.repeat`` over the tile lengths;
+    * a static int (traced path, uniform ``bt``-row tiles) — the rows are a
+      static-shape ``[n_tiles, bt]`` grid scattered with jnp, which traces.
+      A live tile's pad rows get the tile's divisor too; they accumulate
+      exactly 0 and carry gate 0, so the combine cannot see the difference.
+    """
+    if isinstance(row_len, (int, np.integer)):
+        import jax.numpy as jnp
+
+        bt = int(row_len)
+        starts = jnp.asarray(row_start)
+        rows = starts[:, None] + jnp.arange(bt, dtype=starts.dtype)[None, :]
+        m = jnp.maximum(jnp.asarray(tile_mult), 1).astype(jnp.float32)
+        div = jnp.ones((n_rows,), jnp.float32)
+        return div.at[rows].set(jnp.broadcast_to(m[:, None], rows.shape))
+
+    starts = np.asarray(row_start, dtype=np.int64)
+    lens = np.asarray(row_len, dtype=np.int64)
+    m = np.maximum(1, np.asarray(tile_mult)).astype(np.float32)
+    div = np.ones((n_rows,), dtype=np.float32)
+    total = int(lens.sum())
+    if total:
+        # concatenated aranges: [0..len0) ++ [0..len1) ++ ...
+        offs = np.arange(total) - np.repeat(np.cumsum(lens) - lens, lens)
+        div[np.repeat(starts, lens) + offs] = np.repeat(m, lens)
+    return div
+
+
 def row_divisor(tasks: Sequence[ExpertTask], mult, n_rows: int) -> np.ndarray:
     """Per-row multiplicity divisor (the expert-family analogue of
     ``tasks.multiplicity_divisor``): each live row belongs to exactly one
@@ -130,10 +327,12 @@ def row_divisor(tasks: Sequence[ExpertTask], mult, n_rows: int) -> np.ndarray:
     is exact.  Pad rows (gate 0, accumulate 0) keep divisor 1.
     """
     mult = np.asarray(mult)
-    div = np.ones((n_rows,), dtype=np.float32)
-    for t in tasks:
-        div[t.row_start: t.row_start + t.row_len] = max(1, int(mult[t.tid]))
-    return div
+    if not tasks:
+        return np.ones((n_rows,), dtype=np.float32)
+    starts = np.fromiter((t.row_start for t in tasks), np.int64, len(tasks))
+    lens = np.fromiter((t.row_len for t in tasks), np.int64, len(tasks))
+    tids = np.fromiter((t.tid for t in tasks), np.int64, len(tasks))
+    return np.asarray(divisor_from_tiles(starts, lens, mult[tids], n_rows))
 
 
 class MoEDispatchHost(PallasWSHost):

@@ -16,10 +16,14 @@ dispatch replaced by expert-tile tasks through the ``pallas_ws`` megakernel:
   normalized out — multiplicity makes the dropless dispatch *cheap*, not
   merely possible.
 
-Routing must be concrete to build queues (the same host-side Put as the
-ragged attention front-ends), so this path is eager-only: calling it under
-``jit`` raises, and :func:`repro.models.moe.moe_ffn_dispatch` falls back to
-the dense path inside traced code.
+Queue construction has two Puts behind one kernel launch: eager callers go
+through the host-side ``route_to_tasks``/``make_queue_state`` (concrete
+numpy, compact padding, full telemetry), traced callers through the
+jit-compatible ``route_to_tasks_jax``/``make_queue_state_jax`` (fixed
+shapes at the static worst case, live masks) — so ``jit(moe_ffn_ws)`` and
+``scan``-over-layers run the *same dropless dispatch*, not a dense
+fallback.  The two builders are certified equivalent by
+tests/test_dispatch_conformance.py.
 """
 
 from __future__ import annotations
@@ -28,10 +32,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.pallas_ws.queues import make_queue_state
+from repro.pallas_ws.queues import make_queue_state, make_queue_state_jax
 from repro.pallas_ws.ragged import RaggedStats as DispatchStats  # family-neutral telemetry
 
-from .dispatch import route_to_tasks, row_divisor
+from .dispatch import (
+    divisor_from_tiles,
+    expert_queue_candidates,
+    expert_rounds_bound,
+    route_to_tasks,
+    route_to_tasks_jax,
+    row_divisor,
+)
 from .expert_kernel import run_moe_schedule
 
 SCHEDULES = ("ws", "static")
@@ -63,7 +74,31 @@ def _shared_experts(x_flat, p):
     return jnp.einsum("tf,fd->td", hs, p["ws_d"])
 
 
+def _under_autodiff(x) -> bool:
+    """True when ``x`` carries a differentiation trace (grad/jvp/vjp).
+
+    The megakernel's ``pallas_call`` uses input_output_aliases and has no
+    JVP rule, so autodiff through the dispatch dies deep inside jax with an
+    opaque error; peeling the tracer stack lets the layer fail fast with an
+    actionable one instead.  ``jit``/``scan``/``vmap`` tracers pass through
+    untouched.
+    """
+    from jax.interpreters import ad
+
+    t = x
+    while isinstance(t, jax.core.Tracer):
+        if isinstance(t, ad.JVPTracer):
+            return True
+        t = getattr(t, "primal", None)
+    return False
+
+
 def _check_drained(state, res) -> None:
+    if isinstance(res.mult, jax.core.Tracer):
+        # traced launches run the static worst-case rounds bound
+        # (expert_rounds_bound), which drains by construction; there is no
+        # concrete mult to inspect mid-trace.
+        return
     if state.n_tasks and not (res.mult[: state.n_tasks] >= 1).all():
         missing = int((res.mult[: state.n_tasks] == 0).sum())
         raise RuntimeError(
@@ -72,16 +107,26 @@ def _check_drained(state, res) -> None:
         )
 
 
-def combine_routed(routed, tasks, res):
+def combine_routed(routed, tasks, res, *, bt: int | None = None):
     """Multiplicity-normalized, gate-weighted combine of an expert-kernel
     run: divide each row's accumulation by its tile's execution count
-    (``row_divisor``), then scatter-add ``gate * row`` back to the tokens.
-    Pad rows carry gate 0, so they vanish.  Returns [n_tokens, d] float32.
+    (``divisor_from_tiles``), then scatter-add ``gate * row`` back to the
+    tokens.  Pad rows carry gate 0, so they vanish.  Returns
+    [n_tokens, d] float32.
 
-    The single combine implementation — `moe_ffn_ws`, the dispatch
-    benchmark, and the dropless property tests all call this.
+    ``tasks`` is the host task list; pass ``tasks=None`` with the tile
+    height ``bt`` for a trace-built layout, where tile ``t`` statically owns
+    rows ``[t·bt, (t+1)·bt)``.  The single combine implementation —
+    `moe_ffn_ws` (both Puts), the dispatch benchmark, and the dropless
+    property tests all call this.
     """
-    div = row_divisor(tasks, res.mult, routed.n_rows)
+    if tasks is None:
+        assert bt is not None, "traced combine needs the static tile height"
+        n_tiles = res.mult.shape[0]
+        starts = jnp.arange(n_tiles, dtype=jnp.int32) * bt
+        div = divisor_from_tiles(starts, bt, res.mult, routed.n_rows)
+    else:
+        div = row_divisor(tasks, res.mult, routed.n_rows)
     yr = res.out / jnp.asarray(div)[:, None]
     return jnp.zeros((routed.n_tokens, res.out.shape[-1]), jnp.float32).at[
         jnp.asarray(routed.tok_idx)
@@ -117,27 +162,52 @@ def moe_ffn_ws(
     ``schedule="ws"`` steals; ``"static"`` drains owner queues only (same
     kernel and cost accounting — the makespan baseline).  ``bt`` is the
     expert-tile row count; ``n_programs`` the persistent program count.
+
+    Accepts tracers: under ``jit``/``scan``/``vmap`` the queues are built by
+    the traced Put (``route_to_tasks_jax`` + ``make_queue_state_jax``, fixed
+    worst-case shapes) and the kernel runs the static
+    ``expert_rounds_bound`` — still dropless, no dense fallback anywhere.
+    ``return_stats`` needs concrete telemetry and is eager-only.
+
+    Forward-only: the megakernel (aliased pallas_call) has no JVP rule, so
+    differentiating through this layer raises — training objectives must
+    select ``cfg.moe_dispatch="dense"`` explicitly (ROADMAP: differentiable
+    dropless dispatch via a custom VJP against the no-drop reference).
     """
     assert schedule in SCHEDULES, schedule
-    if isinstance(x, jax.core.Tracer):
+    traced = isinstance(x, jax.core.Tracer)
+    if traced and return_stats:
+        raise ValueError("return_stats needs concrete telemetry; call eagerly")
+    if _under_autodiff(x):
         raise TypeError(
-            "moe_ffn_ws needs concrete routing to build task queues; call it "
-            "eagerly or use moe_ffn_dispatch (falls back to dense under jit)"
+            "moe_ffn_ws is forward-only (the WS megakernel has no JVP rule): "
+            "use cfg.moe_dispatch='dense' for differentiated training steps"
         )
     B, S, d = x.shape
     E = cfg.n_experts
     x_flat = x.reshape(B * S, d)
     probs, gate_vals, idx, aux = _router(x_flat, p, cfg, group_size)
 
-    # host-side Put: concrete routing -> expert-tile owner queues.  With
-    # stealing every expert gets its own queue (the per-expert token list);
-    # the static baseline needs every queue owned by a program, so experts
-    # are placed round-robin over programs — classic expert parallelism.
-    idx_h = np.asarray(jax.device_get(idx))
-    gates_h = np.asarray(jax.device_get(gate_vals))
-    tasks, routed = route_to_tasks(idx_h, gates_h, E, bt=bt)
+    # Put: routing -> expert-tile owner queues.  With stealing every expert
+    # gets its own queue (the per-expert token list); the static baseline
+    # needs every queue owned by a program, so experts are placed
+    # round-robin over programs — classic expert parallelism.
     n_queues = E if schedule == "ws" else n_programs
-    state = make_queue_state(tasks, n_programs, n_queues=n_queues, partition="owner")
+    steal = schedule == "ws"
+    if traced:
+        records, live, routed = route_to_tasks_jax(idx, gate_vals, E, bt=bt)
+        cand, cand_live = expert_queue_candidates(records, live, n_queues)
+        tasks = None
+        state = make_queue_state_jax(
+            cand, cand_live, n_programs, n_tasks=records.shape[0] * records.shape[1]
+        )
+        rounds = expert_rounds_bound(B * S * cfg.top_k, bt, n_queues, n_programs, steal)
+    else:
+        idx_h = np.asarray(jax.device_get(idx))
+        gates_h = np.asarray(jax.device_get(gate_vals))
+        tasks, routed = route_to_tasks(idx_h, gates_h, E, bt=bt)
+        state = make_queue_state(tasks, n_programs, n_queues=n_queues, partition="owner")
+        rounds = None
 
     res = run_moe_schedule(
         state,
@@ -145,14 +215,15 @@ def moe_ffn_ws(
         routed.tok_idx,
         p["we_g"], p["we_u"], p["we_d"],
         bt=bt,
-        steal=(schedule == "ws"),
+        steal=steal,
+        rounds=rounds,
         interpret=interpret,
     )
     _check_drained(state, res)
 
     # multiplicity-divisor normalization, then the gate-weighted combine:
     # a dropless scatter-add over every routed pair.
-    y = combine_routed(routed, tasks, res)
+    y = combine_routed(routed, tasks, res, bt=bt)
 
     if cfg.n_shared_experts:
         y = y + _shared_experts(x_flat, p).astype(jnp.float32)

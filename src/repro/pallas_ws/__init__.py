@@ -24,6 +24,8 @@ _EXPORTS = {
     "ws_try_extract": "kernel",
     "QueueState": "queues",
     "make_queue_state": "queues",
+    "make_queue_state_jax": "queues",
+    "owner_queue_candidates": "queues",
     "partition_tasks": "queues",
     "queue_costs": "queues",
     "RaggedStats": "ragged",

@@ -168,6 +168,10 @@ def _generic_ws_kernel(
 
 @dataclass
 class WSRunResult:
+    """Post-launch queue/telemetry arrays.  Host numpy on eager launches;
+    jax values (tracers) when the launch itself is being traced — the
+    scalar properties below are host-only conveniences."""
+
     out: jax.Array          # family output, mult-weighted accumulation
     head: np.ndarray        # final shared heads            [n_queues]
     local_head: np.ndarray  # final per-program bounds      [n_programs, n_queues]
@@ -196,7 +200,17 @@ def default_rounds(state: QueueState, steal: bool) -> int:
 
     Stealing: Graham's greedy bound ``total/P + max_cost`` (no program idles
     while any queue is non-empty).  Static: the heaviest queue runs alone.
+
+    Needs concrete queue contents — trace-built states must pass an explicit
+    static worst-case ``rounds`` to the launch (the grid size cannot depend
+    on traced values).
     """
+    if isinstance(state.tasks, jax.core.Tracer):
+        raise ValueError(
+            "rounds must be given explicitly for a trace-built QueueState: "
+            "the grid is static, so use the family's worst-case bound "
+            "(e.g. moe_ws.dispatch.expert_rounds_bound)"
+        )
     costs = queue_costs(state)
     total = int(costs.sum())
     if total == 0:
@@ -265,15 +279,21 @@ def launch_ws_grid(
         interpret=interpret,
     )(*mutable, *pure_arrays)
     head, local_head, taken, clock, work, steals, mult, out = outs
+
+    def host(a):
+        # eager launches hand numpy views back to the drills/telemetry;
+        # traced launches keep the jax values (np.asarray would throw)
+        return a if isinstance(a, jax.core.Tracer) else np.asarray(a)
+
     return WSRunResult(
         out=out,
-        head=np.asarray(head),
-        local_head=np.asarray(local_head),
-        taken=np.asarray(taken),
-        clock=np.asarray(clock),
-        work=np.asarray(work),
-        steals=np.asarray(steals),
-        mult=np.asarray(mult),
+        head=host(head),
+        local_head=host(local_head),
+        taken=host(taken),
+        clock=host(clock),
+        work=host(work),
+        steals=host(steals),
+        mult=host(mult),
     )
 
 

@@ -23,12 +23,21 @@ increasing, so no *program* extracts the same slot twice.
 ``taken[q, s]`` is the announcement row: the extracting program writes its id
 after claiming slot ``s``.  It is diagnostic (multiplicity accounting /
 drills), never consulted by the extraction protocol itself.
+
+Two builders produce the same layout:
+
+* :func:`make_queue_state` — the host-side Put: concrete tasks laid out with
+  numpy before launch (serving's eager paths, the drills);
+* :func:`make_queue_state_jax` — the **traced** Put: fixed-shape candidate
+  records compacted on device with jnp ops, so queue construction lives
+  inside ``jit``/``scan``.  The megakernel launch consumes either through
+  the one :func:`repro.pallas_ws.kernel.launch_ws_grid` code path.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Sequence
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -37,14 +46,21 @@ from .tasks import BOTTOM, TASK_WIDTH, TileTask
 
 @dataclass
 class QueueState:
-    """Host-side mirror of the device queue arrays (numpy int32)."""
+    """Mirror of the device queue arrays.
+
+    Host-built states hold numpy int32 arrays plus the concrete
+    ``task_list``; trace-built states hold jnp values (possibly tracers)
+    with ``task_list=None`` and the *static* ``n_tasks_hint`` sizing the
+    multiplicity buffer (dead candidate slots keep mult 0).
+    """
 
     tasks: np.ndarray        # [n_queues, capacity, TASK_WIDTH]
     head: np.ndarray         # [n_queues]
     tail: np.ndarray         # [n_queues]
     local_head: np.ndarray   # [n_programs, n_queues]
     taken: np.ndarray        # [n_queues, capacity], -1 = not extracted
-    task_list: List[TileTask] = field(default_factory=list)
+    task_list: Optional[List[TileTask]] = None
+    n_tasks_hint: Optional[int] = None
 
     @property
     def n_queues(self) -> int:
@@ -60,7 +76,9 @@ class QueueState:
 
     @property
     def n_tasks(self) -> int:
-        return len(self.task_list)
+        if self.task_list is not None:
+            return len(self.task_list)
+        return self.n_tasks_hint or 0
 
 
 def partition_tasks(
@@ -118,3 +136,88 @@ def queue_costs(state: QueueState) -> np.ndarray:
 
     live = state.tasks[:, :, F_OP] != BOTTOM
     return np.where(live, state.tasks[:, :, F_COST], 0).sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# traced (jit-compatible) queue construction — the device-side Put
+
+
+def owner_queue_candidates(records, live, n_queues: int) -> Tuple:
+    """Regroup per-owner candidate tiles into per-queue candidate arrays.
+
+    ``records``: [n_owners, per_owner, TASK_WIDTH]; ``live``:
+    [n_owners, per_owner] bool.  Owner ``o`` lands on queue ``o % n_queues``
+    (the same placement :func:`partition_tasks` uses for ``"owner"``), its
+    tiles ordered by ``o // n_queues`` within the queue — all with static
+    shapes, so the regrouping traces.  Owners are padded with dead rows up
+    to a multiple of ``n_queues``.
+    """
+    import jax.numpy as jnp
+
+    records = jnp.asarray(records)
+    live = jnp.asarray(live)
+    n_owners, per_owner, width = records.shape
+    if n_queues == n_owners:
+        return records, live
+    pad = (-n_owners) % n_queues
+    if pad:
+        records = jnp.pad(records, ((0, pad), (0, 0), (0, 0)),
+                          constant_values=BOTTOM)
+        live = jnp.pad(live, ((0, pad), (0, 0)), constant_values=False)
+    rows = (n_owners + pad) // n_queues
+    # owner o = j * n_queues + q  ->  queue q, block j
+    records = records.reshape(rows, n_queues, per_owner, width)
+    records = records.transpose(1, 0, 2, 3).reshape(n_queues, rows * per_owner, width)
+    live = live.reshape(rows, n_queues, per_owner)
+    live = live.transpose(1, 0, 2).reshape(n_queues, rows * per_owner)
+    return records, live
+
+
+def make_queue_state_jax(
+    records,
+    live,
+    n_programs: int,
+    *,
+    n_tasks: int,
+) -> QueueState:
+    """Traced Put: materialize the Fig. 7 queue arrays as jnp values.
+
+    ``records``: [n_queues, slots, TASK_WIDTH] candidate task records at
+    their static slots; ``live``: [n_queues, slots] bool masks.  Each
+    queue's live records are stably compacted to the slot prefix (the order
+    a host-side Put loop would have produced) and every dead slot is set to
+    the ⊥ record, restoring the "whole suffix is ⊥" invariant the extraction
+    protocol scans for.  ``tail[q]`` is the live count — exactly the value
+    the owner's Put counter would hold.  All ops are jnp, so this works on
+    tracers; on concrete inputs it produces the same layout
+    :func:`make_queue_state` builds host-side (certified by
+    tests/test_dispatch_conformance.py).
+
+    ``n_tasks`` is the static candidate count sizing the multiplicity
+    buffer; dead candidates keep ``mult == 0`` and their ``tid`` is never
+    extracted.
+    """
+    import jax.numpy as jnp
+
+    records = jnp.asarray(records, jnp.int32)
+    live = jnp.asarray(live)
+    n_queues, slots, _ = records.shape
+    # stable partition: live records first, original order preserved
+    order = jnp.argsort(jnp.where(live, 0, 1).astype(jnp.int32),
+                        axis=1, stable=True)
+    arr = jnp.take_along_axis(records, order[:, :, None], axis=1)
+    live_sorted = jnp.take_along_axis(live, order, axis=1)
+    arr = jnp.where(live_sorted[:, :, None], arr, BOTTOM)
+    # two trailing ⊥ slots: the paper's pre-clear invariant (and slack so a
+    # full queue's head can step one past the last live slot)
+    arr = jnp.pad(arr, ((0, 0), (0, 2), (0, 0)), constant_values=BOTTOM)
+    cap = slots + 2
+    return QueueState(
+        tasks=arr,
+        head=jnp.zeros((n_queues,), jnp.int32),
+        tail=live.sum(axis=1).astype(jnp.int32),
+        local_head=jnp.zeros((n_programs, n_queues), jnp.int32),
+        taken=jnp.full((n_queues, cap), -1, jnp.int32),
+        task_list=None,
+        n_tasks_hint=int(n_tasks),
+    )

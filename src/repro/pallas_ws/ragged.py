@@ -21,14 +21,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from .kernel import WSRunResult, run_ws_schedule
-from .queues import make_queue_state, queue_costs
+from .queues import make_queue_state, make_queue_state_jax, owner_queue_candidates, queue_costs
 from .tasks import (
+    OP_DECODE_TILE,
     emit_decode_tasks,
     emit_flash_tasks,
     multiplicity_divisor,
 )
 
 SCHEDULES = ("ws", "static")
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
 
 
 @dataclass
@@ -123,6 +128,49 @@ def ragged_flash_attention(
     return out
 
 
+def emit_decode_tasks_jax(lengths, n_heads: int, bk: int):
+    """Traced twin of :func:`repro.pallas_ws.tasks.emit_decode_tasks`: the
+    full static ``[B, H]`` candidate grid with live masks ``lengths > 0``
+    instead of a host loop that skips dead rows.  ``tid = b·H + h`` is
+    static, so the multiplicity buffer is provisioned at ``B·H`` and dead
+    slots simply stay 0.  Returns ``(records [B, H, TASK_WIDTH],
+    live [B, H])`` ready for :func:`owner_queue_candidates`.
+    """
+    ln = jnp.asarray(lengths).astype(jnp.int32)
+    B = ln.shape[0]
+    H = n_heads
+    cost = jnp.maximum(1, -(-ln // bk))             # kv blocks, >= 1 like host
+    b_ids = jnp.arange(B, dtype=jnp.int32)[:, None]
+    h_ids = jnp.arange(H, dtype=jnp.int32)[None, :]
+    shape = (B, H)
+    records = jnp.stack(
+        [
+            jnp.full(shape, OP_DECODE_TILE, jnp.int32),
+            jnp.broadcast_to(b_ids, shape),
+            jnp.broadcast_to(h_ids, shape),
+            jnp.zeros(shape, jnp.int32),            # q_start
+            jnp.ones(shape, jnp.int32),             # q_len
+            jnp.broadcast_to(ln[:, None], shape),   # kv_end
+            b_ids * H + h_ids,                      # tid (static, unique)
+            jnp.broadcast_to(cost[:, None], shape),
+        ],
+        axis=-1,
+    )
+    live = jnp.broadcast_to(ln[:, None] > 0, shape)
+    return records, live
+
+
+def decode_rounds_bound(B: int, n_heads: int, S: int, bk: int,
+                        n_queues: int, n_programs: int, steal: bool) -> int:
+    """Static worst-case lockstep rounds for a traced decode launch (every
+    slot at full cache length ``S``) — the trace-time stand-in for
+    :func:`repro.pallas_ws.kernel.default_rounds` (cost unit: kv blocks)."""
+    blocks = max(1, _cdiv(S, bk))
+    if steal:
+        return _cdiv(B * n_heads * blocks, n_programs) + blocks + n_queues + 8
+    return _cdiv(B, n_queues) * n_heads * blocks + 8
+
+
 def ragged_decode_attention(
     q,
     k,
@@ -138,24 +186,49 @@ def ragged_decode_attention(
 ):
     """Single-token decode over ragged KV caches: q [B, H, hd] attends slots
     ``[0, lengths[b])`` of k, v [B, Hkv, S, hd].  Dead rows (length 0)
-    return 0."""
+    return 0.
+
+    Accepts traced ``lengths`` (the jitted serving decode): queue
+    construction switches to the fixed-shape traced Put — the full [B, H]
+    candidate grid live-masked by ``lengths > 0``, compacted on device —
+    with the static worst-case rounds bound, and telemetry
+    (``return_stats``) stays eager-only.
+    """
     assert schedule in SCHEDULES, schedule
     B, H, hd = q.shape
     S = k.shape[2]
-    lengths = np.asarray(lengths, dtype=np.int64)
-    assert lengths.shape == (B,) and lengths.max(initial=0) <= S
     bk = min(bk, max(1, S))
+    steal = schedule == "ws"
+    traced = isinstance(lengths, jax.core.Tracer)
 
-    tasks = emit_decode_tasks(lengths, H, bk)
-    state = make_queue_state(tasks, n_programs, partition=partition)
+    if traced:
+        if return_stats:
+            raise ValueError("return_stats needs concrete telemetry; call eagerly")
+        n_queues = n_programs  # partition="batch": queue = b % n_programs
+        records, live = emit_decode_tasks_jax(lengths, H, bk)
+        cand, cand_live = owner_queue_candidates(records, live, n_queues)
+        state = make_queue_state_jax(cand, cand_live, n_programs, n_tasks=B * H)
+        rounds = decode_rounds_bound(B, H, S, bk, n_queues, n_programs, steal)
+        tasks = None
+    else:
+        lengths = np.asarray(lengths, dtype=np.int64)
+        assert lengths.shape == (B,) and lengths.max(initial=0) <= S
+        tasks = emit_decode_tasks(lengths, H, bk)
+        state = make_queue_state(tasks, n_programs, partition=partition)
+        rounds = None
     q4 = q[:, :, None, :]
     kp = _pad_to(k, 2, bk)
     vp = _pad_to(v, 2, bk)
     res = run_ws_schedule(
         state, q4, kp, vp,
         causal=False, bq=1, bk=bk,
-        steal=(schedule == "ws"), interpret=interpret,
+        steal=steal, rounds=rounds, interpret=interpret,
     )
+    if traced:
+        # tid = b·H + h is static: the divisor is just the reshaped
+        # multiplicity buffer (dead slots: mult 0 -> divisor 1, output 0)
+        div = jnp.maximum(res.mult.reshape(B, H), 1).astype(jnp.float32)
+        return (res.out / div[:, :, None, None])[:, :, 0].astype(q.dtype)
     _check_drained(state, res)
     div = multiplicity_divisor(tasks, res.mult, (B, H, 1))
     out = (res.out / jnp.asarray(div)[..., None])[:, :, 0].astype(q.dtype)

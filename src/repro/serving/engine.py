@@ -44,6 +44,29 @@ from repro.models import (
 )
 
 
+def jit_decode_step_ws(cfg, *, schedule: str = "ws", bk: int = 64,
+                       n_programs: int = 8):
+    """Compiled end-to-end WS decode step: ``jit(decode_step_ws)`` with the
+    config closed over (it carries static shape info) and ``(params,
+    caches, tokens, pos)`` traced.
+
+    Inside the trace the per-slot lengths are tracers, so every layer's
+    attention queues — and, with ``cfg.moe_dispatch == "ws"``, the expert
+    FFN queues — are built by the traced Put (fixed worst-case shapes, live
+    masks) and drained by the same megakernel the eager path launches: the
+    whole decode step, scheduler included, is one XLA computation.  One
+    compilation per (slot count, capacity) shape, like the dense
+    ``decode_step`` the batcher jits.
+    """
+    from repro.models import decode_step_ws as _ws
+
+    return jax.jit(
+        lambda p, c, t, pos: _ws(
+            p, cfg, c, t, pos, schedule=schedule, bk=bk, n_programs=n_programs
+        )
+    )
+
+
 @dataclass
 class Request:
     rid: int
@@ -63,6 +86,7 @@ class ContinuousBatcher:
         greedy: bool = True,
         attn_schedule: str = "ws",
         use_ws: bool = True,
+        jit_ws: bool = False,
     ):
         self.params, self.cfg = params, cfg
         self.B, self.cap = slots, capacity
@@ -74,13 +98,18 @@ class ContinuousBatcher:
         # Decode attention schedule: with `use_ws` (the default, for the
         # architectures decode_step_ws covers) every engine step routes the
         # slots' ragged lengths through the repro.pallas_ws scheduler
-        # ("ws" steals, "static" drains owner queues).  `use_ws=False` is
-        # the escape hatch back to the jitted dense decode_step.
+        # ("ws" steals, "static" drains owner queues).  `jit_ws` compiles
+        # that whole step — queues built by the traced Put on device —
+        # instead of re-building queues host-side each iteration.
+        # `use_ws=False` is the escape hatch back to the jitted dense
+        # decode_step.
         if attn_schedule not in ("ws", "static"):
             raise ValueError(f"attn_schedule must be 'ws' or 'static': {attn_schedule!r}")
         self.attn_schedule = attn_schedule
         self.use_ws = bool(use_ws and ws_decode_supported(cfg))
-        if self.use_ws:
+        if self.use_ws and jit_ws:
+            self._decode = jit_decode_step_ws(cfg, schedule=attn_schedule)
+        elif self.use_ws:
             self._decode = lambda p, c, t, pos: decode_step_ws(
                 p, cfg, c, t, pos, schedule=attn_schedule
             )

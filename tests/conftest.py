@@ -1,0 +1,25 @@
+"""Shared test configuration: hypothesis profiles.
+
+* ``dev`` (default) — the tier-1 smoke depth: few examples so the full
+  suite stays fast on a laptop and in the tier-1 CI job.
+* ``ci`` — the deep adversarial run (`--hypothesis-profile=ci`): fixed
+  derandomized seed, higher example count, no deadline.  The dedicated
+  conformance CI job uses this so the dispatch conformance suite explores
+  far more schedules than the smoke does.
+
+Tests that want profile-controlled depth must NOT pin ``max_examples`` in
+their own ``@settings`` (a local setting overrides the profile).
+"""
+
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:  # hypothesis is an optional dev dep; bare envs skip
+    pass
+else:
+    _COMMON = dict(
+        deadline=None,  # pallas interpret launches dwarf any deadline
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    settings.register_profile("dev", max_examples=10, **_COMMON)
+    settings.register_profile("ci", max_examples=40, derandomize=True, **_COMMON)
+    settings.load_profile("dev")

@@ -142,8 +142,8 @@ def test_moe_ffn_ws_no_shared_experts():
 
 
 def test_moe_dispatch_flag_eager_and_traced():
-    """cfg.moe_dispatch == "ws": eager callers get the dropless scheduler,
-    traced callers fall back to the dense path instead of crashing."""
+    """cfg.moe_dispatch == "ws": eager AND traced callers get the dropless
+    scheduler — the deleted dense fallback must never return under jit."""
     cfg = _smoke_cfg(moe_dispatch="ws")
     p, x = _moe_inputs(cfg, seed=5)
     ref, _ = moe_ffn_nodrop_ref(x, p, cfg)
@@ -151,13 +151,21 @@ def test_moe_dispatch_flag_eager_and_traced():
     np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5, atol=1e-5)
 
     y_tr, _ = jax.jit(lambda xx: moe_ffn_dispatch(xx, p, cfg))(x)
-    y_dense, _ = moe_ffn(x, p, cfg)
     np.testing.assert_allclose(
-        np.asarray(y_tr), np.asarray(y_dense), rtol=1e-5, atol=1e-5
+        np.asarray(y_tr), np.asarray(ref), rtol=1e-5, atol=1e-5
     )
 
-    with pytest.raises(TypeError, match="concrete routing"):
-        jax.jit(lambda xx: moe_ffn_ws(xx, p, cfg))(x)
+    # dense runs only when the config names it
+    cfg_dense = _smoke_cfg(moe_dispatch="dense")
+    y_dense, _ = jax.jit(lambda xx: moe_ffn_dispatch(xx, p, cfg_dense))(x)
+    y_dense_ref, _ = moe_ffn(x, p, cfg_dense)
+    np.testing.assert_allclose(
+        np.asarray(y_dense), np.asarray(y_dense_ref), rtol=1e-5, atol=1e-5
+    )
+
+    # return_stats needs concrete telemetry — clear error, not a crash
+    with pytest.raises(ValueError, match="concrete telemetry"):
+        jax.jit(lambda xx: moe_ffn_ws(xx, p, cfg, return_stats=True))(x)
 
 
 # ---------------------------------------------------------------------------

@@ -17,7 +17,7 @@ jax = pytest.importorskip("jax")
 pytest.importorskip("hypothesis")
 
 import jax.numpy as jnp  # noqa: E402
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis import given, strategies as st  # noqa: E402
 
 from repro.moe_ws import (  # noqa: E402
     combine_routed,
@@ -28,7 +28,8 @@ from repro.moe_ws import (  # noqa: E402
 from repro.pallas_ws import make_queue_state  # noqa: E402
 
 
-@settings(max_examples=10, deadline=None)
+# depth comes from the conftest hypothesis profile: 10 examples in the
+# tier-1 smoke (`dev`), more under the CI conformance job (`ci`)
 @given(data=st.data())
 def test_dropless_invariant_any_adversarial_schedule(data):
     E = data.draw(st.integers(2, 5), label="E")
