@@ -107,7 +107,13 @@ def run_one(T, d, f, E, k, P, bt, cf, skew, seed=0):
         max_load=int(loads.max()), mean_load=float(loads.mean()),
         dense_dropped=dropped, dense_drop_rate=drop_rate,
     )
-    for sched in ("static", "ws"):
+    # "ws" runs the cost-aware O(1) victim selection (the default);
+    # "ws_scan" keeps the PR-1 sequential scan for comparison (§3.6)
+    for name, sched, policy in (
+        ("static", "static", "cost"),
+        ("ws", "ws", "cost"),
+        ("ws_scan", "ws", "scan"),
+    ):
         tasks, routed = route_to_tasks(idx, gates, E, bt=bt)
         # ws: one queue per expert (the per-expert token list), thieves roam;
         # static: experts placed round-robin over programs (classic EP) and
@@ -118,18 +124,21 @@ def run_one(T, d, f, E, k, P, bt, cf, skew, seed=0):
         t0 = time.perf_counter()
         res = run_moe_schedule(
             state, x, routed.tok_idx, wg, wu, wd,
-            bt=bt, steal=(sched == "ws"),
+            bt=bt, steal=(sched == "ws"), steal_policy=policy,
         )
         dt = time.perf_counter() - t0
         y = combine_routed(routed, tasks, res)
         err = float(jnp.abs(y - ref).max())
         assert (res.mult[: state.n_tasks] >= 1).all(), "dropless invariant"
-        row[sched] = dict(
+        row[name] = dict(
             makespan=res.makespan,
             total_work=res.total_work,
             wasted_slots=res.wasted_slots,
             steals=int(res.steals.sum()),
             mult_max=int(res.mult[: state.n_tasks].max()),
+            slots_scanned=res.slots_scanned,
+            extractions=res.extractions,
+            scan_per_extraction=round(res.scan_per_extraction, 3),
             max_abs_err=err,
             wall_s=round(dt, 3),
         )

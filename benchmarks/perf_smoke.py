@@ -1,0 +1,136 @@
+"""CI perf-smoke: replay the dry-run bench grid and fail on regression.
+
+The interpret-mode schedulers are deterministic — makespans, wasted slots,
+and scan-traffic counters are exact replays of the lockstep model — so a
+perf regression shows up as a *number change*, not a noisy timing.  This
+job re-runs the quick grid (`ragged_attention`, `moe_dispatch`,
+`steal_policy`, all ``--dry-run``), summarizes it with the same reducer
+that builds BENCH.json, and compares against the committed BENCH.json
+"smoke" trajectory:
+
+* ws/static makespan ratio must not drop below committed × (1 − tol);
+* scan traffic per extraction (cost policy) must not grow past
+  committed × (1 + tol);
+* the §3.6 scan-traffic reduction and pool queue-bytes ratio must not drop
+  below committed × (1 − tol);
+* the pool layout must still reproduce the host-layout ws makespan exactly.
+
+Exit 1 on any violation (or if a bench's own headline claim already
+failed).  Tolerance defaults to 10% — tight enough to catch a real
+scheduler regression, loose enough to survive benign re-tuning of the
+dry-run shapes (which should land together with a refreshed BENCH.json).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+if __package__ in (None, ""):  # run as a bare script: python benchmarks/...
+    sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))
+
+from benchmarks.run import BENCH_JSON, summarize  # noqa: E402
+
+
+def _check(errs, name, ok, detail):
+    if not ok:
+        errs.append(f"{name}: {detail}")
+
+
+def compare(fresh: dict, committed: dict, tol: float) -> list:
+    errs = []
+    lo, hi = 1.0 - tol, 1.0 + tol
+    if not committed:
+        return ["BENCH.json has no 'smoke' section: run "
+                "`python -m benchmarks.run --quick` and commit BENCH.json"]
+    # every committed section must actually be compared — a missing fresh
+    # summary (bench not run, dryrun file absent) is a failure, never a
+    # silent skip, or the gate would pass vacuously
+    for section in ("ragged_attention", "moe_dispatch", "steal_policy"):
+        if committed.get(section) and not fresh.get(section):
+            errs.append(f"{section}: committed reference exists but the "
+                        "fresh dry-run summary is missing — bench not run?")
+    r_new, r_old = fresh.get("ragged_attention"), committed.get("ragged_attention")
+    if r_new and r_old:
+        _check(errs, "ragged makespan ratio",
+               r_new["makespan_ratio"] >= r_old["makespan_ratio"] * lo,
+               f"{r_new['makespan_ratio']} < {r_old['makespan_ratio']} * {lo}")
+        _check(errs, "ragged scan traffic (cost)",
+               r_new["scan_per_extraction_cost"]
+               <= r_old["scan_per_extraction_cost"] * hi,
+               f"{r_new['scan_per_extraction_cost']} > "
+               f"{r_old['scan_per_extraction_cost']} * {hi}")
+    m_new, m_old = fresh.get("moe_dispatch"), committed.get("moe_dispatch")
+    if m_new and m_old:
+        _check(errs, "moe speedup vs dense",
+               m_new["speedup_vs_dense"] >= m_old["speedup_vs_dense"] * lo,
+               f"{m_new['speedup_vs_dense']} < {m_old['speedup_vs_dense']} * {lo}")
+        _check(errs, "moe scan traffic (cost)",
+               m_new["scan_per_extraction_cost"]
+               <= m_old["scan_per_extraction_cost"] * hi,
+               f"{m_new['scan_per_extraction_cost']} > "
+               f"{m_old['scan_per_extraction_cost']} * {hi}")
+    p_new = {(r["E"], r["skew"]): r for r in fresh.get("steal_policy", [])}
+    p_old = {(r["E"], r["skew"]): r for r in committed.get("steal_policy", [])}
+    if p_old and not set(p_new) & set(p_old):
+        errs.append(
+            "steal_policy: no (E, skew) cell in common between the fresh "
+            f"dry-run grid {sorted(p_new)} and the committed reference "
+            f"{sorted(p_old)} — refresh BENCH.json together with the grid"
+        )
+    for key in sorted(set(p_new) & set(p_old)):
+        n, o = p_new[key], p_old[key]
+        tag = f"steal_policy E={key[0]} skew={key[1]}"
+        _check(errs, f"{tag} traffic reduction",
+               n["scan_traffic_reduction"] >= o["scan_traffic_reduction"] * lo,
+               f"{n['scan_traffic_reduction']} < "
+               f"{o['scan_traffic_reduction']} * {lo}")
+        _check(errs, f"{tag} queue bytes ratio",
+               n["queue_bytes"]["ratio"] >= o["queue_bytes"]["ratio"] * lo,
+               f"{n['queue_bytes']['ratio']} < {o['queue_bytes']['ratio']} * {lo}")
+        _check(errs, f"{tag} ws makespan",
+               n["ws_cost_makespan"] <= o["ws_cost_makespan"] * hi,
+               f"{n['ws_cost_makespan']} > {o['ws_cost_makespan']} * {hi}")
+        _check(errs, f"{tag} pool schedule parity",
+               n["pool_makespan"] == n["ws_cost_makespan"],
+               f"pool {n['pool_makespan']} != ws {n['ws_cost_makespan']}")
+    return errs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tolerance", type=float, default=0.10)
+    ap.add_argument("--no-run", action="store_true",
+                    help="compare existing *.dryrun.json instead of re-running")
+    args = ap.parse_args(argv)
+
+    status = 0
+    if not args.no_run:
+        from benchmarks import moe_dispatch, ragged_attention, steal_policy
+
+        # each main asserts its own headline claim and rewrites *.dryrun.json
+        status |= ragged_attention.main(["--dry-run"])
+        status |= moe_dispatch.main(["--dry-run"])
+        status |= steal_policy.main(["--dry-run"])
+
+    if not BENCH_JSON.exists():
+        print(f"[perf-smoke] {BENCH_JSON} missing — commit the trajectory first")
+        return 1
+    committed = json.loads(BENCH_JSON.read_text()).get("smoke", {})
+    fresh = summarize(quick=True)
+    errs = compare(fresh, committed, args.tolerance)
+    for e in errs:
+        print(f"[perf-smoke] REGRESSION {e}")
+    if status:
+        print("[perf-smoke] a bench headline claim failed (see above)")
+    if errs or status:
+        return 1
+    print("[perf-smoke] OK — no regression vs committed BENCH.json smoke "
+          f"trajectory (tolerance {args.tolerance:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

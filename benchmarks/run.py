@@ -8,17 +8,118 @@ Sections:
   [scheduler]      L1 TPU adaptation — lockstep rounds + async makespan
   [ragged]         device-resident WS tile scheduler vs static grid (pallas_ws)
   [moe]            dropless ws MoE dispatch vs capacity-dropping dense (moe_ws)
+  [policy]         cost-aware O(1) victim selection vs sequential scan +
+                   shared-pool vs padded traced queue layouts (§3.6)
   [loader]         L2 host pipeline — work-stealing loader throughput
   [roofline]       dry-run roofline table (if results/dryrun.jsonl exists)
 
 `python -m benchmarks.run --quick` shrinks sizes for CI.
+
+After the scheduler-level sections run, the canonical perf trajectory is
+composed into the top-level **BENCH.json** (repo root): one summary per
+bench — makespan ratios, wasted tile-slots, scan traffic per extraction,
+queue-array bytes, dryrun flops/bytes, fence-free audit — under a "full"
+key (normal run) or a "smoke" key (``--quick``, deterministic interpret-mode
+sizes).  PR-over-PR regressions diff this one file; the CI perf-smoke job
+(`benchmarks/perf_smoke.py`) replays the quick grid and fails on regression
+against the committed "smoke" numbers.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import time
+
+BENCH_DIR = pathlib.Path(__file__).parent
+BENCH_JSON = BENCH_DIR.parent / "BENCH.json"
+
+
+def _load(name: str, quick: bool):
+    suffix = ".dryrun.json" if quick else ".json"
+    path = BENCH_DIR / f"{name}{suffix}"
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())
+
+
+def summarize(quick: bool) -> dict:
+    """Reduce the per-bench JSON artifacts to the diffable trajectory rows:
+    per bench the headline ratios at the interesting skews, scan traffic,
+    queue bytes, and the dryrun cost-analysis numbers."""
+    out = {}
+    ragged = _load("BENCH_ragged", quick)
+    if ragged:
+        rows = [r for r in ragged["rows"] if r["skew"] >= 4] or ragged["rows"]
+        r = rows[-1]
+        out["ragged_attention"] = dict(
+            skew=r["skew"],
+            ws_makespan=r["ws"]["makespan"],
+            static_makespan=r["static"]["makespan"],
+            makespan_ratio=round(r["speedup_vs_static"], 3),
+            wasted_ws=r["ws"]["wasted_slots"],
+            wasted_static=r["static"]["wasted_slots"],
+            scan_per_extraction_cost=r["ws"]["scan_per_extraction"],
+            scan_per_extraction_scan=r["ws_scan"]["scan_per_extraction"],
+            scan_traffic_reduction=r["scan_traffic_reduction"],
+            max_abs_err=r["ws"]["max_abs_err"],
+        )
+    moe = _load("BENCH_moe", quick)
+    if moe:
+        rows = [r for r in moe["rows"] if r["skew"] >= 4] or moe["rows"]
+        r = rows[-1]
+        out["moe_dispatch"] = dict(
+            skew=r["skew"],
+            ws_makespan=r["ws"]["makespan"],
+            dense_makespan=r["dense_makespan"],
+            speedup_vs_dense=round(r["speedup_vs_dense"], 3),
+            dense_drop_rate=round(r["dense_drop_rate"], 4),
+            scan_per_extraction_cost=r["ws"]["scan_per_extraction"],
+            scan_per_extraction_scan=r["ws_scan"]["scan_per_extraction"],
+            max_abs_err=r["ws"]["max_abs_err"],
+        )
+        if "traced_put_audit" in moe:
+            out["traced_put_audit"] = [
+                {k: a[k] for k in ("experiment", "algorithm", "rmws_per_op",
+                                   "locks_per_op", "fences_per_op")}
+                for a in moe["traced_put_audit"]
+            ]
+    policy = _load("BENCH_policy", quick)
+    if policy:
+        out["steal_policy"] = [
+            dict(
+                E=r["E"],
+                skew=r["skew"],
+                ws_cost_makespan=r["ws_cost"]["makespan"],
+                ws_scan_makespan=r["ws_scan"]["makespan"],
+                static_makespan=r["static"]["makespan"],
+                pool_makespan=r["pool"]["makespan"],
+                scan_per_extraction_cost=r["ws_cost"]["scan_per_extraction"],
+                scan_per_extraction_scan=r["ws_scan"]["scan_per_extraction"],
+                scan_traffic_reduction=r["traffic_reduction"],
+                queue_bytes=r["queue_bytes"],
+                dryrun=r.get("dryrun"),
+            )
+            for r in policy["rows"]
+        ]
+    return out
+
+
+def compose_bench_json(quick: bool) -> None:
+    """Merge this run's summaries into the top-level BENCH.json under the
+    "smoke" (--quick) or "full" key, preserving the other key so one file
+    carries both the committed trajectory and its CI reference."""
+    summary = summarize(quick)
+    if not summary:
+        return
+    data = {}
+    if BENCH_JSON.exists():
+        data = json.loads(BENCH_JSON.read_text())
+    data["smoke" if quick else "full"] = summary
+    BENCH_JSON.write_text(json.dumps(data, indent=2))
+    print(f"[benchmarks] composed {BENCH_JSON}")
 
 
 def main(argv=None):
@@ -26,7 +127,7 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--sections",
-        default="zero-cost,spanning-tree,scheduler,ragged,moe,loader,roofline",
+        default="zero-cost,spanning-tree,scheduler,ragged,moe,policy,loader,roofline",
     )
     args = ap.parse_args(argv)
     sections = set(args.sections.split(","))
@@ -66,6 +167,18 @@ def main(argv=None):
         # nonzero when ws-dropless fails to beat the dropping dense path
         # >= 2x at skew >= 4 (or dense mysteriously stops dropping)
         status |= moe_dispatch.main(["--dry-run"] if args.quick else [])
+
+    if "policy" in sections:
+        print("\n== [policy] cost-aware victim selection + queue layouts ==")
+        from . import steal_policy
+
+        # nonzero when the §3.6 claims fail at the largest expert count:
+        # scan traffic not reduced >= 10x, pool bytes not reduced >= 4x,
+        # or a makespan regression vs the scan policy
+        status |= steal_policy.main(["--dry-run"] if args.quick else [])
+
+    if any(s in sections for s in ("ragged", "moe", "policy")):
+        compose_bench_json(quick=args.quick)
 
     if "loader" in sections:
         print("\n== [loader] L2 work-stealing data loader ==")

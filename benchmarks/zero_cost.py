@@ -172,17 +172,22 @@ _FORBIDDEN_HLO = (
 def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
                      bt: int = 4, n_programs: int = 4) -> List[Dict]:
     """The traced-Put analogue of :func:`audit_fence_free`: lower the whole
-    jit pipeline — queue construction (`route_to_tasks_jax` +
-    `make_queue_state_jax`, the device-side Put) plus the megakernel drain
-    (Take only, and Take+Steal) — and assert the emitted StableHLO contains
-    **zero** RMW / atomic / lock / fence operations.
+    jit pipeline — queue construction (the device-side Put, padded
+    `route_to_tasks_jax` + `make_queue_state_jax` AND the shared-pool
+    `route_to_tasks_pool_jax` + `make_pool_queue_state_jax`) plus the
+    megakernel drain (Take only, and Take+Steal under **both** victim
+    selections: the sequential scan and the §3.6 cost-aware advisory
+    argmax) — and assert the emitted StableHLO contains **zero** RMW /
+    atomic / lock / fence operations.  The advisory `remaining` updates
+    and the vectorized head/tail/argmax victim reads must lower to plain
+    tensor ops like everything else.
 
     The host audit counts instructions through the backend cells; a traced
     Put has no backend cells, so the architecture-independent witness is the
     compiled program text itself: every shared-memory touch the lowering
     emits is a plain tensor read/write (scatters/gathers/dynamic-slices),
     never a synchronization primitive.  Returns one row per experiment in
-    the bench_zero_cost row format, for BENCH_moe.json.
+    the bench_zero_cost row format, for BENCH_moe.json / BENCH.json.
     """
     import re
 
@@ -194,9 +199,13 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
         expert_queue_candidates,
         expert_rounds_bound,
         route_to_tasks_jax,
+        route_to_tasks_pool_jax,
     )
     from repro.moe_ws.expert_kernel import run_moe_schedule
-    from repro.pallas_ws.queues import make_queue_state_jax
+    from repro.pallas_ws.queues import (
+        make_pool_queue_state_jax,
+        make_queue_state_jax,
+    )
 
     rng = np.random.RandomState(0)
     idx = np.stack([rng.choice(n_experts, top_k, replace=False)
@@ -209,26 +218,44 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
     wu = rng.randn(n_experts, d, f).astype(np.float32)
     wd = rng.randn(n_experts, f, d).astype(np.float32)
 
+    # (experiment label, steal, steal_policy, layout)
+    cases = (
+        ("put-take", False, "cost", "padded"),
+        ("put-steal", True, "scan", "padded"),
+        ("put-steal", True, "cost", "padded"),
+        ("put-steal", True, "cost", "pool"),
+    )
     rows = []
-    for steal in (False, True):
+    for exp, steal, policy, layout in cases:
         n_queues = n_experts if steal else n_programs
 
-        def pipeline(idx, gates, x, wg, wu, wd, steal=steal, n_queues=n_queues):
-            records, live, routed = route_to_tasks_jax(
-                idx, gates, n_experts, bt=bt
+        def pipeline(idx, gates, x, wg, wu, wd, steal=steal, policy=policy,
+                     layout=layout, n_queues=n_queues):
+            rounds = expert_rounds_bound(
+                n_tokens * top_k, bt, n_queues, n_programs, steal
             )
-            cand, cand_live = expert_queue_candidates(records, live, n_queues)
-            state = make_queue_state_jax(
-                cand, cand_live, n_programs,
-                n_tasks=records.shape[0] * records.shape[1],
-            )
+            if layout == "pool":
+                rec, tail, off, routed = route_to_tasks_pool_jax(
+                    idx, gates, n_experts, bt=bt
+                )
+                state = make_pool_queue_state_jax(
+                    rec, tail, off, routed.loads, n_programs,
+                    n_tasks=rec.shape[0],
+                )
+            else:
+                records, live, routed = route_to_tasks_jax(
+                    idx, gates, n_experts, bt=bt
+                )
+                cand, cand_live = expert_queue_candidates(records, live, n_queues)
+                state = make_queue_state_jax(
+                    cand, cand_live, n_programs,
+                    n_tasks=records.shape[0] * records.shape[1],
+                )
             res = run_moe_schedule(
                 state, x, routed.tok_idx, wg, wu, wd, bt=bt, steal=steal,
-                rounds=expert_rounds_bound(
-                    n_tokens * top_k, bt, n_queues, n_programs, steal
-                ),
+                steal_policy=policy, rounds=rounds,
             )
-            return res.out, res.mult, res.head, res.taken
+            return res.out, res.mult, res.head, res.taken, res.remaining
 
         text = jax.jit(pipeline).lower(
             jnp.asarray(idx), jnp.asarray(gates), jnp.asarray(x),
@@ -240,12 +267,13 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
             if re.search(pat, text, flags=re.IGNORECASE)
         }
         assert not hits, (
-            f"traced Put lowering contains synchronization ops: {hits}"
+            f"traced Put lowering [{policy}/{layout}] contains "
+            f"synchronization ops: {hits}"
         )
         rows.append(
             dict(
-                experiment="put-steal" if steal else "put-take",
-                algorithm="moe-ws-traced",
+                experiment=exp,
+                algorithm=f"moe-ws-traced[{policy},{layout}]",
                 n_ops=n_tokens * top_k,
                 hlo_bytes=len(text),
                 reads_per_op="traced",  # plain tensor ops only; see hlo scan
@@ -257,7 +285,8 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
         )
     print(
         "[zero-cost] traced-put audit OK: moe-ws-traced jit lowering has "
-        "0 RMW / 0 locks / 0 fences on put-take and put-steal"
+        "0 RMW / 0 locks / 0 fences on put-take and put-steal "
+        "(scan + cost policies, padded + pool layouts)"
     )
     return rows
 

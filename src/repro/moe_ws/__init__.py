@@ -24,6 +24,7 @@ _EXPORTS = {
     "expert_rounds_bound": "dispatch",
     "route_to_tasks": "dispatch",
     "route_to_tasks_jax": "dispatch",
+    "route_to_tasks_pool_jax": "dispatch",
     "row_divisor": "dispatch",
     "run_moe_schedule": "expert_kernel",
     "DispatchStats": "layer",

@@ -24,18 +24,22 @@ against :mod:`repro.core` backend cells so the adversarial simulator and the
 instruction-mix audit certify the expert dispatch path like every other
 ``ALGORITHMS`` entry (registered as ``"moe-ws"``).
 
-Two Put implementations, one layout
------------------------------------
+Three Put implementations, one protocol
+---------------------------------------
 :func:`route_to_tasks` is the host-side Put (concrete routing, numpy,
 compact per-expert padding).  :func:`route_to_tasks_jax` is the **traced**
-Put: the same stable-sort grouping expressed as jnp ops over fixed shapes,
-so queue construction works inside ``jit``/``scan``.  Fixed shapes force
-the static worst case — every expert's row range is provisioned at
-``R = ceil(T·k / bt) · bt`` rows (the hottest router could send every
-routed pair to one expert), ``E·R`` rows total, with per-tile live masks
-(``row_len``) marking the real load.  Dead tiles become ⊥ records at queue
-build time, dead rows carry token 0 / gate 0, so the combine is unchanged.
-The two builders are certified equivalent, layout and output, by
+Put on the padded layout: the same stable-sort grouping expressed as jnp
+ops over fixed shapes, so queue construction works inside ``jit``/``scan``.
+Fixed shapes force the static worst case — every expert's row range is
+provisioned at ``R = ceil(min(T, T·k)/bt) · bt`` rows, ``E·R`` rows total,
+with per-tile live masks (``row_len``) marking the real load.
+:func:`route_to_tasks_pool_jax` is the traced Put on the **shared-pool**
+layout (DESIGN.md §3.6): still static shapes, but per-expert *offsets* are
+data, so the whole pool is ``ceil(T·k/bt) + E`` tiles — ~E× less HBM at
+high expert counts, and no ``max_expert_load`` escape needed.  Dead tiles
+become ⊥ records at queue build time, dead rows carry token 0 / gate 0, so
+the combine is unchanged.  The builders are certified equivalent — layout,
+adversarial extraction telemetry, and normalized output — by
 tests/test_dispatch_conformance.py.
 """
 
@@ -171,6 +175,31 @@ def route_to_tasks(
     )
 
 
+def _group_by_expert_jax(idx, gates, n_experts: int):
+    """Stable counting sort of the routed (token, choice) pairs by expert —
+    the shared grouping preamble of both traced Puts: a stable argsort over
+    the flat ``[T·k]`` pair list plus a cumsum rank of each pair within its
+    expert.  Returns ``(T, k, order, sorted_e, flat_t, flat_g, loads,
+    rank)``; the caller scatters ``flat_t[order]``/``flat_g[order]`` to
+    ``row_offset[sorted_e] + rank`` for its layout's offsets."""
+    import jax.numpy as jnp
+
+    idx = jnp.asarray(idx, jnp.int32)
+    gates = jnp.asarray(gates, jnp.float32)
+    T, k = idx.shape
+    flat_e = idx.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    flat_g = gates.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    loads = jnp.zeros((n_experts,), jnp.int32).at[flat_e].add(1)
+    start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(loads)[:-1]]
+    )
+    rank = jnp.arange(T * k, dtype=jnp.int32) - start[sorted_e]
+    return T, k, order, sorted_e, flat_t, flat_g, loads, rank
+
+
 def route_to_tasks_jax(idx, gates, n_experts: int, bt: int = 8,
                        max_expert_load: int | None = None):
     """Traced twin of :func:`route_to_tasks`: jit-compatible Put.
@@ -203,26 +232,14 @@ def route_to_tasks_jax(idx, gates, n_experts: int, bt: int = 8,
     import jax.numpy as jnp
 
     _register_routed_pytree()
-    idx = jnp.asarray(idx, jnp.int32)
-    gates = jnp.asarray(gates, jnp.float32)
-    T, k = idx.shape
-    Tk = T * k
     E = n_experts
+    T, k, order, sorted_e, flat_t, flat_g, loads, rank = _group_by_expert_jax(
+        idx, gates, E
+    )
+    Tk = T * k
     cap = min(Tk, T if max_expert_load is None else int(max_expert_load))
     tiles_per_e = _cdiv(cap, bt)     # static
     R = tiles_per_e * bt             # static rows per expert
-
-    flat_e = idx.reshape(-1)
-    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
-    flat_g = gates.reshape(-1)
-    # stable counting sort by expert: rank of each pair within its expert
-    order = jnp.argsort(flat_e, stable=True)
-    sorted_e = flat_e[order]
-    loads = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
-    start = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(loads)[:-1]]
-    )
-    rank = jnp.arange(Tk, dtype=jnp.int32) - start[sorted_e]
     dest = sorted_e * R + rank
     tok_idx = jnp.zeros((E * R,), jnp.int32).at[dest].set(flat_t[order])
     gate_rows = jnp.zeros((E * R,), jnp.float32).at[dest].set(flat_g[order])
@@ -257,6 +274,92 @@ def route_to_tasks_jax(idx, gates, n_experts: int, bt: int = 8,
     return records, live, routed
 
 
+def route_to_tasks_pool_jax(idx, gates, n_experts: int, bt: int = 8):
+    """Traced Put, **shared-pool layout**: compact twin of
+    :func:`route_to_tasks_jax` (DESIGN.md §3.6).
+
+    The padded layout provisions every expert at the static worst case —
+    ``E · ceil(min(T, Tk)/bt)`` tiles — because per-queue shapes must be
+    static.  But only *shapes* must be static: per-queue *offsets* may be
+    data.  This builder allocates one flat pool of
+
+        ``pool_tiles = ceil(Tk/bt) + E``
+
+    tiles (each expert wastes < 1 tile of tail padding, so
+    ``Σ_e ceil(loads[e]/bt) ≤ floor(Tk/bt) + E`` always fits — for **any**
+    routing, including experts repeated within a token's k choices, so no
+    ``max_expert_load`` escape is needed) and lays expert ``e``'s tiles at
+    the dynamic tile offset ``toff[e] = Σ_{e'<e} ceil(loads[e']/bt)``.
+    Pool tile ``j`` owns routed rows ``[j·bt, (j+1)·bt)`` and is its own
+    ``tid``, so the multiplicity buffer and the combine's divisor grid are
+    pool-indexed with no remap.  Queue-array bytes shrink ~E× at high
+    expert counts (`benchmarks/steal_policy.py`).
+
+    Requires per-expert queues (``n_queues == n_experts``): queue ``e`` is
+    exactly the pool segment ``[toff[e], toff[e+1})``, already compacted in
+    the order the host Put loop produces — feed the results straight to
+    :func:`repro.pallas_ws.queues.make_pool_queue_state_jax`.
+
+    Returns ``(records [pool_tiles, TASK_WIDTH], tail [E], pool_off [E+1],
+    routed)`` with all RoutedSet array fields jnp values
+    (``expert_off = toff·bt`` is dynamic here).
+    """
+    import jax.numpy as jnp
+
+    _register_routed_pytree()
+    E = n_experts
+    T, k, order, sorted_e, flat_t, flat_g, loads, rank = _group_by_expert_jax(
+        idx, gates, E
+    )
+    Tk = T * k
+    pool_tiles = _cdiv(Tk, bt) + E  # static
+    n_tiles = (loads + bt - 1) // bt  # live tiles per expert (dynamic)
+    toff = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(n_tiles).astype(jnp.int32)]
+    )
+    row_off = toff * bt
+    dest = row_off[sorted_e] + rank
+    n_rows = pool_tiles * bt
+    tok_idx = jnp.zeros((n_rows,), jnp.int32).at[dest].set(flat_t[order])
+    gate_rows = jnp.zeros((n_rows,), jnp.float32).at[dest].set(flat_g[order])
+
+    # per-pool-tile records: tile j belongs to the expert whose segment
+    # [toff[e], toff[e+1}) contains j (duplicates in toff — empty experts —
+    # resolve to the owning non-empty expert under side="right")
+    j = jnp.arange(pool_tiles, dtype=jnp.int32)
+    e_of = jnp.clip(
+        jnp.searchsorted(toff, j, side="right").astype(jnp.int32) - 1,
+        0, E - 1,
+    )
+    i_of = j - toff[e_of]
+    live = j < toff[E]
+    rl = jnp.where(live, jnp.clip(loads[e_of] - i_of * bt, 0, bt), 0)
+    bot = jnp.full((pool_tiles,), BOTTOM, jnp.int32)
+    records = jnp.stack(
+        [
+            jnp.where(live, jnp.int32(OP_EXPERT_TILE), jnp.int32(BOTTOM)),
+            jnp.where(live, e_of, jnp.int32(BOTTOM)),
+            j * bt,                  # row_start: pool tile j owns rows j·bt..
+            rl,                      # row_len
+            bot,
+            bot,
+            j,                       # tid == pool tile index (no remap)
+            rl,                      # cost = live rows
+        ],
+        axis=-1,
+    )
+    routed = RoutedSet(
+        tok_idx=tok_idx,
+        gates=gate_rows,
+        expert_off=row_off,          # dynamic: expert e's rows start here
+        loads=loads,
+        n_rows=n_rows,
+        n_routed=Tk,
+        n_tokens=T,
+    )
+    return records, n_tiles, toff, routed
+
+
 def expert_queue_candidates(records, live, n_queues: int):
     """Owner placement for trace-built expert tiles: expert ``e`` lands on
     queue ``e % n_queues`` (per-expert queues when ``n_queues == E``, the
@@ -274,13 +377,21 @@ def expert_rounds_bound(
     ``n_routed`` pairs — the trace-time stand-in for
     :func:`repro.pallas_ws.kernel.default_rounds` (cost unit: routed rows).
 
-    Stealing: Graham's greedy bound on the worst total (every pair live)
-    plus one max-cost tile and the scan slack.  Static: one queue may own
-    every routed row.
+    Stealing: Graham's greedy bound ``ceil(total/P) + max_cost`` on the
+    worst admissible total (every pair live; a tile costs at most ``bt``
+    rows).  The PR-3 ``+ n_queues + 8`` slack is gone: both steal policies
+    guarantee an idle program claims a task whenever any queue is non-empty
+    (DESIGN.md §3.6), which is exactly the premise of the Graham bound.
+    No-steal: run compression drains each owner's whole queue in its first
+    idle round, so the bound is O(1) (kernel.STATIC_COMPRESSED_ROUNDS).
     """
     if steal:
-        return _cdiv(n_routed, n_programs) + bt + n_queues + 8
-    return n_routed + 8
+        return _cdiv(n_routed, n_programs) + bt
+    # lazy: this module stays jax-free at import time for the host-shim
+    # consumers; the static bound is only asked for around a kernel launch
+    from repro.pallas_ws.kernel import STATIC_COMPRESSED_ROUNDS
+
+    return STATIC_COMPRESSED_ROUNDS
 
 
 def divisor_from_tiles(row_start, row_len, tile_mult, n_rows: int):

@@ -32,12 +32,14 @@ from repro.pallas_ws.queues import QueueState
 from repro.pallas_ws.tasks import F_E, F_RL, F_RS
 
 
-def _expert_execute(tasks_ref, fq, fs, pure, out_ref, *, bt: int):
-    """Gather–FFN–scatter-accumulate for one expert tile."""
+def _expert_execute(rec, pure, out_ref, *, bt: int):
+    """Gather–FFN–scatter-accumulate for one expert tile.  ``rec(field)``
+    reads one field of the claimed task record (layout-agnostic — the shell
+    resolves dense vs shared-pool slot addressing)."""
     tok_idx_ref, x_ref, wg_ref, wu_ref, wd_ref = pure
-    e = tasks_ref[fq, fs, F_E]
-    rs = tasks_ref[fq, fs, F_RS]
-    rl = tasks_ref[fq, fs, F_RL]
+    e = rec(F_E)
+    rs = rec(F_RS)
+    rl = rec(F_RL)
 
     d = x_ref.shape[-1]
     f = wg_ref.shape[-1]
@@ -73,9 +75,11 @@ def run_moe_schedule(
     *,
     bt: int,
     steal: bool = True,
+    steal_policy: str = "cost",
     rounds: Optional[int] = None,
     out: Optional[jax.Array] = None,
     mult: Optional[jax.Array] = None,
+    compress_runs: Optional[bool] = None,
     interpret: bool = True,
 ) -> WSRunResult:
     """Launch the expert megakernel over a prepared :class:`QueueState`.
@@ -92,5 +96,6 @@ def run_moe_schedule(
     execute = functools.partial(_expert_execute, bt=bt)
     return launch_ws_grid(
         state, execute, (tok_idx, x, wg, wu, wd), out,
-        steal=steal, rounds=rounds, mult=mult, interpret=interpret,
+        steal=steal, steal_policy=steal_policy, rounds=rounds, mult=mult,
+        compress_runs=compress_runs, interpret=interpret,
     )

@@ -32,7 +32,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.pallas_ws.queues import make_queue_state, make_queue_state_jax
+from repro.pallas_ws.queues import (
+    make_pool_queue_state_jax,
+    make_queue_state,
+    make_queue_state_jax,
+)
 from repro.pallas_ws.ragged import RaggedStats as DispatchStats  # family-neutral telemetry
 
 from .dispatch import (
@@ -41,11 +45,13 @@ from .dispatch import (
     expert_rounds_bound,
     route_to_tasks,
     route_to_tasks_jax,
+    route_to_tasks_pool_jax,
     row_divisor,
 )
 from .expert_kernel import run_moe_schedule
 
 SCHEDULES = ("ws", "static")
+QUEUE_LAYOUTS = ("pool", "padded")
 
 
 def _router(x_flat, p, cfg, group_size: int):
@@ -99,10 +105,15 @@ def _check_drained(state, res) -> None:
         # (expert_rounds_bound), which drains by construction; there is no
         # concrete mult to inspect mid-trace.
         return
-    if state.n_tasks and not (res.mult[: state.n_tasks] >= 1).all():
-        missing = int((res.mult[: state.n_tasks] == 0).sum())
+    if state.pool_off is not None:
+        # pool layout: live slots are exactly the pool prefix [0, Σtail)
+        n_live = int(np.asarray(state.tail).sum())
+    else:
+        n_live = state.n_tasks
+    if n_live and not (res.mult[:n_live] >= 1).all():
+        missing = int((res.mult[:n_live] == 0).sum())
         raise RuntimeError(
-            f"expert scheduler under-provisioned: {missing}/{state.n_tasks} "
+            f"expert scheduler under-provisioned: {missing}/{n_live} "
             "tiles never executed (rounds bound too small?)"
         )
 
@@ -152,6 +163,8 @@ def moe_ffn_ws(
     group_size: int = 1024,
     *,
     schedule: str = "ws",
+    steal_policy: str = "cost",
+    queue_layout: str | None = None,
     n_programs: int = 8,
     bt: int = 8,
     interpret: bool = True,
@@ -160,14 +173,21 @@ def moe_ffn_ws(
     """x: [B, S, d] -> (y: [B, S, d], aux_loss scalar) — dropless WS dispatch.
 
     ``schedule="ws"`` steals; ``"static"`` drains owner queues only (same
-    kernel and cost accounting — the makespan baseline).  ``bt`` is the
-    expert-tile row count; ``n_programs`` the persistent program count.
+    kernel and cost accounting — the makespan baseline).  ``steal_policy``
+    picks the victim-selection path: ``"cost"`` (default) is the O(1)
+    advisory-ranked argmax, ``"scan"`` the PR-1 full sequential scan
+    (DESIGN.md §3.6).  ``bt`` is the expert-tile row count; ``n_programs``
+    the persistent program count.
 
     Accepts tracers: under ``jit``/``scan``/``vmap`` the queues are built by
-    the traced Put (``route_to_tasks_jax`` + ``make_queue_state_jax``, fixed
-    worst-case shapes) and the kernel runs the static
-    ``expert_rounds_bound`` — still dropless, no dense fallback anywhere.
-    ``return_stats`` needs concrete telemetry and is eager-only.
+    the traced Put and the kernel runs the static ``expert_rounds_bound`` —
+    still dropless, no dense fallback anywhere.  ``queue_layout`` selects
+    the traced Put's arrays: ``"pool"`` (the ws default) is the compact
+    shared-pool layout (``ceil(Tk/bt) + E`` tiles total,
+    ``route_to_tasks_pool_jax``), ``"padded"`` the PR-3 per-expert
+    worst-case layout; the static schedule regroups experts onto program
+    queues and always uses ``"padded"``.  ``return_stats`` needs concrete
+    telemetry and is eager-only.
 
     Forward-only: the megakernel (aliased pallas_call) has no JVP rule, so
     differentiating through this layer raises — training objectives must
@@ -175,6 +195,7 @@ def moe_ffn_ws(
     dropless dispatch via a custom VJP against the no-drop reference).
     """
     assert schedule in SCHEDULES, schedule
+    assert queue_layout in (None,) + QUEUE_LAYOUTS, queue_layout
     traced = isinstance(x, jax.core.Tracer)
     if traced and return_stats:
         raise ValueError("return_stats needs concrete telemetry; call eagerly")
@@ -194,13 +215,36 @@ def moe_ffn_ws(
     # round-robin over programs — classic expert parallelism.
     n_queues = E if schedule == "ws" else n_programs
     steal = schedule == "ws"
-    if traced:
-        records, live, routed = route_to_tasks_jax(idx, gate_vals, E, bt=bt)
-        cand, cand_live = expert_queue_candidates(records, live, n_queues)
-        tasks = None
-        state = make_queue_state_jax(
-            cand, cand_live, n_programs, n_tasks=records.shape[0] * records.shape[1]
+    layout = queue_layout
+    if layout is None:
+        # the host Put already lays rows out compactly, so "pool" is the
+        # *traced* compact layout; eager callers keep the host arrays (full
+        # task-list telemetry) unless they ask for pool explicitly
+        layout = "pool" if (steal and traced) else "padded"
+    if layout == "pool" and not steal:
+        raise ValueError(
+            "queue_layout='pool' needs per-expert queues (schedule='ws'); "
+            "the static baseline regroups experts onto program queues"
         )
+    if traced or layout == "pool":
+        # trace-compatible Put (also exercisable eagerly for pool telemetry)
+        if layout == "pool":
+            records, tail, pool_off, routed = route_to_tasks_pool_jax(
+                idx, gate_vals, E, bt=bt
+            )
+            tasks = None
+            state = make_pool_queue_state_jax(
+                records, tail, pool_off, routed.loads, n_programs,
+                n_tasks=records.shape[0],
+            )
+        else:
+            records, live, routed = route_to_tasks_jax(idx, gate_vals, E, bt=bt)
+            cand, cand_live = expert_queue_candidates(records, live, n_queues)
+            tasks = None
+            state = make_queue_state_jax(
+                cand, cand_live, n_programs,
+                n_tasks=records.shape[0] * records.shape[1],
+            )
         rounds = expert_rounds_bound(B * S * cfg.top_k, bt, n_queues, n_programs, steal)
     else:
         idx_h = np.asarray(jax.device_get(idx))
@@ -216,6 +260,7 @@ def moe_ffn_ws(
         p["we_g"], p["we_u"], p["we_d"],
         bt=bt,
         steal=steal,
+        steal_policy=steal_policy,
         rounds=rounds,
         interpret=interpret,
     )
@@ -229,7 +274,7 @@ def moe_ffn_ws(
         y = y + _shared_experts(x_flat, p).astype(jnp.float32)
     y = y.astype(x.dtype).reshape(B, S, d)
     if return_stats:
-        return y, aux, DispatchStats.from_run(schedule, state, res)
+        return y, aux, DispatchStats.from_run(schedule, state, res, steal_policy)
     return y, aux
 
 

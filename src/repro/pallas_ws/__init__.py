@@ -16,6 +16,7 @@ which is pure Python — never pay the jax import.
 
 _EXPORTS = {
     "PallasWSHost": "host",
+    "STEAL_POLICIES": "kernel",
     "WSRunResult": "kernel",
     "default_rounds": "kernel",
     "launch_ws_grid": "kernel",
@@ -23,6 +24,7 @@ _EXPORTS = {
     "ws_account": "kernel",
     "ws_try_extract": "kernel",
     "QueueState": "queues",
+    "make_pool_queue_state_jax": "queues",
     "make_queue_state": "queues",
     "make_queue_state_jax": "queues",
     "owner_queue_candidates": "queues",

@@ -22,10 +22,33 @@ from __future__ import annotations
 from typing import Any, Dict
 
 from repro.core.backend import BOTTOM, EMPTY, ThreadBackend
+from repro.pallas_ws.tasks import F_COST, TASK_WIDTH
+
+
+def _cost_of(x: Any) -> int:
+    """Tile-slot cost of a payload: encoded task records (TASK_WIDTH int
+    sequences, see :mod:`repro.pallas_ws.tasks`) carry it in ``F_COST``;
+    opaque payloads count one slot."""
+    try:
+        if len(x) == TASK_WIDTH:
+            return max(1, int(x[F_COST]))
+    except (TypeError, ValueError):
+        pass
+    return 1
 
 
 class PallasWSHost:
-    """Fence-free Read/Write work-stealing on the pallas_ws array layout."""
+    """Fence-free Read/Write work-stealing on the pallas_ws array layout.
+
+    Mirrors the device layout one field for one, including the §3.6
+    advisory ``remaining`` cost summary the cost-aware victim selection
+    ranks by: a plain Read/Write register, incremented by Put and
+    decremented best-effort by successful Take/Steal (read, then write —
+    deliberately *not* an RMW; concurrent updates may lose decrements, and
+    the protocol never depends on the value).  The instruction-mix audit
+    (`benchmarks/zero_cost.audit_fence_free`) covers these accesses too:
+    still zero RMW, zero locks on every path.
+    """
 
     OWNER = 0
 
@@ -33,15 +56,22 @@ class PallasWSHost:
         backend = backend if backend is not None else ThreadBackend()
         self.backend = backend
         self.capacity = capacity
-        # Device mirror: tasks[s] (⊥-initialized suffix), head, taken row.
+        # Device mirror: tasks[s] (⊥-initialized suffix), head, taken row,
+        # advisory remaining-cost summary.
         self.tasks = backend.array(capacity, init=BOTTOM)
         self.Head = backend.cell(0)
         self.taken = backend.map_cells(default=-1)  # (pid, slot) announcements
+        self.remaining = backend.cell(0)  # advisory, plain R/W, stale-tolerant
         self.tail = 0  # owner-local, exactly as in Fig. 7
         self._local: Dict[int, int] = {}  # per-process persistent head bound
 
     def _local_head(self, pid: int) -> int:
         return self._local.get(pid, 0)
+
+    def _advise(self, delta: int, pid: int) -> None:
+        # best-effort advisory update: plain read + plain write (no CAS) —
+        # a lost update mis-ranks victims, never changes extraction
+        self.remaining.write(max(0, self.remaining.read(pid) + delta), pid)
 
     # -- owner ----------------------------------------------------------
     def put(self, x: Any) -> bool:
@@ -55,6 +85,7 @@ class PallasWSHost:
             # Fig. 7 write so instruction-count benchmarks stay faithful)
             self.tasks.write(self.tail + 2, BOTTOM, pid)
         self.tail += 1  # line 1 ordering is owner-local, no fence needed
+        self._advise(_cost_of(x), pid)
         return True
 
     def take(self) -> Any:
@@ -65,6 +96,7 @@ class PallasWSHost:
             self.Head.write(head + 1, pid)  # plain write, read elided
             self._local[pid] = head + 1
             self.taken.write((pid, head), pid, pid)
+            self._advise(-_cost_of(x), pid)
             return x
         self._local[pid] = head
         return EMPTY
@@ -79,11 +111,17 @@ class PallasWSHost:
             self.Head.write(head + 1, pid)  # line 14 — plain write
             self._local[pid] = head + 1  # line 15
             self.taken.write((pid, head), pid, pid)
+            self._advise(-_cost_of(x), pid)
             return x
         self._local[pid] = head
         return EMPTY
 
     # -- diagnostics ------------------------------------------------------
+    def remaining_estimate(self, pid: int = OWNER) -> int:
+        """The advisory cost summary a §3.6 victim selection would rank by
+        (possibly stale under concurrency — that is the point)."""
+        return self.remaining.read(pid)
+
     def snapshot(self):
         """(head, tail, taken-announcements) for layout parity checks."""
         return (

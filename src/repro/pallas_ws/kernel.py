@@ -28,13 +28,36 @@ program's ``local_head`` row is strictly increasing, so no program
 re-extracts a slot it already extracted — the paper's weak multiplicity,
 verified on-device by tests/test_pallas_ws.py.
 
+Victim selection (DESIGN.md §3.6) is a *policy*, separate from the claim
+protocol above, because it needs no synchronization at all — a victim chosen
+from arbitrarily stale data costs at most wasted probes, never correctness:
+
+* ``steal_policy="cost"`` (default) — O(1) task-slot loads per round.  An
+  idle program probes its own queue, and on ⊥ picks the victim by one
+  vectorized read of all heads/tails plus the plain-write advisory
+  ``remaining[q]`` cost summary (argmax of remaining work over queues whose
+  head view sits below their tail), then probes exactly one slot.  The
+  advisory is updated best-effort by whoever claims a slot (plain read +
+  plain write — stale values only mis-rank victims); the ``head < tail``
+  mask alone guarantees an idle program claims *some* task whenever any
+  queue is non-empty, which is what the tightened Graham rounds bound needs.
+* ``steal_policy="scan"`` — the PR-1 p-relative sequential scan over every
+  queue, kept for apples-to-apples comparison (`benchmarks/steal_policy.py`).
+
+``scanned[p]`` counts the task-slot probes program ``p`` issued (the
+op-field loads of the extraction scan; metadata vectors — head, tail,
+remaining — are not slots).  Slot loads are guarded: a probe whose index is
+out of range (``h >= capacity``, or ``h >= tail[v]`` on the pool layout)
+never issues, so drained queues cost nothing per scan.
+
 Everything scheduler-side is **task-family agnostic**: :func:`ws_try_extract`
 (the protocol), :func:`ws_account` (clock/work/steal/multiplicity
 bookkeeping), and :func:`launch_ws_grid` (queue-array plumbing around
 ``pallas_call``) never inspect the operand fields of a task record.  A family
-plugs in by supplying an ``execute(tasks_ref, fq, fs, pure_refs, out_ref)``
-body — the attention body lives here (:func:`run_ws_schedule`), the MoE
-expert-FFN body in :mod:`repro.moe_ws.expert_kernel`.
+plugs in by supplying an ``execute(rec, pure_refs, out_ref)`` body, where
+``rec(field)`` reads one int32 field of the claimed task record — the
+attention body lives here (:func:`run_ws_schedule`), the MoE expert-FFN body
+in :mod:`repro.moe_ws.expert_kernel`.
 
 Interpret mode (`interpret=True`, the CI path) executes grid cells
 sequentially, which makes single-launch runs sequentially-exact (mult == 1
@@ -71,59 +94,159 @@ from .tasks import (
 
 NEG_INF = -1e30
 
+STEAL_POLICIES = ("cost", "scan")
+
 # Order of the mutable (input-output aliased) queue/telemetry arrays every
-# family launch carries: head, local_head, taken, clock, work, steals, mult,
-# out.  ``launch_ws_grid`` owns this layout.
-N_MUTABLE = 8
+# family launch carries: head, local_head, taken, remaining, clock, work,
+# steals, scanned, mult, out.  ``launch_ws_grid`` owns this layout.
+N_MUTABLE = 10
+
+
+def _slot_field(tasks_ref, pool_off_ref, v, s, field, *, pool: bool):
+    """Read one int32 field of the task record at queue-slot ``(v, s)``.
+
+    Dense layout: ``tasks[v, s, field]``.  Pool layout: queue ``v``'s slots
+    are the contiguous pool segment starting at ``pool_off[v]``, so the same
+    logical slot lives at ``tasks[pool_off[v] + s, field]``.
+    """
+    if pool:
+        return tasks_ref[pool_off_ref[v] + s, field]
+    return tasks_ref[v, s, field]
+
+
+def _probe_slot(
+    tasks_ref, pool_off_ref, tail_ref, v, h, want,
+    *, pool: bool, capacity: int,
+):
+    """Guarded ⊥-probe of slot ``(v, h)``: load the op field only when
+    ``want`` and the index is meaningful — ``h < capacity`` on the dense
+    layout (the clamp-read fix: a drained queue's probe never issues), and
+    ``h < tail[v]`` on the pool layout (a read past tail would land in the
+    *next* queue's pool segment, so it must never issue at all).
+
+    Returns ``(op, issued)`` with ``op == BOTTOM`` when the load was
+    suppressed; ``issued`` feeds the ``scanned`` slot-read counter.
+    """
+    in_range = (h < tail_ref[v]) if pool else (h < capacity)
+    issue = want & in_range
+    op = jax.lax.cond(
+        issue,
+        lambda: _slot_field(tasks_ref, pool_off_ref, v, h, F_OP, pool=pool),
+        lambda: jnp.int32(BOTTOM),
+    )
+    return op, issue.astype(jnp.int32)
 
 
 def ws_try_extract(
-    r, p, head_ref, local_head_ref, tasks_ref, clock_ref,
+    r, p, head_ref, local_head_ref, tail_ref, remaining_ref, tasks_ref,
+    clock_ref, pool_off_ref=None,
     *, n_queues: int, capacity: int, steal: bool,
+    steal_policy: str = "cost", pool: bool = False,
 ):
     """One Take/Steal attempt of WS-WMULT for program ``p`` at round ``r``.
 
-    Scans its own queue first, then (when stealing) every victim in
-    p-relative order, claiming the first live slot with plain writes only.
-    Returns ``(found, queue, slot)``; no-op (found=False) while the
-    program's clock says it is still busy with its previous tile.
+    Probes its own queue first; when stealing, picks further victims by the
+    configured policy and claims the first live slot with plain writes only.
+    Returns ``(found, queue, slot, slots_read)``; no-op (found=False) while
+    the program's clock says it is still busy with its previous tile.
     """
+    assert steal_policy in STEAL_POLICIES, steal_policy
     idle = clock_ref[p] <= r
-
-    def scan_one(j, carry):
-        found, fq, fs = carry
-        v = jax.lax.rem(p + j, n_queues)
-        h = jnp.maximum(local_head_ref[p, v], head_ref[v])  # RMaxRead
-        hc = jnp.minimum(h, capacity - 1)
-        op = tasks_ref[v, hc, F_OP]
-        live = (h < capacity) & (op != BOTTOM)
-        claim = (~found) & live
-
-        @pl.when(claim)
-        def _claim():
-            head_ref[v] = h + 1            # plain write — no CAS
-            local_head_ref[p, v] = h + 1   # persistent local bound
-
-        return (found | live, jnp.where(claim, v, fq), jnp.where(claim, hc, fs))
-
-    n_scan = n_queues if steal else 1
-    zero = (jnp.bool_(False), jnp.int32(0), jnp.int32(0))
-    return jax.lax.cond(
-        idle,
-        lambda: jax.lax.fori_loop(0, n_scan, scan_one, zero),
-        lambda: zero,
+    probe = functools.partial(
+        _probe_slot, tasks_ref, pool_off_ref, tail_ref,
+        pool=pool, capacity=capacity,
     )
+
+    def claim_writes(v, h):
+        head_ref[v] = h + 1            # plain write — no CAS
+        local_head_ref[p, v] = h + 1   # persistent local bound
+
+    def scan_extract():
+        """PR-1 policy: p-relative sequential scan over every queue."""
+
+        def scan_one(j, carry):
+            found, fq, fs, nread = carry
+            v = jax.lax.rem(p + j, n_queues)
+            h = jnp.maximum(local_head_ref[p, v], head_ref[v])  # RMaxRead
+            op, issued = probe(v, h, ~found)
+            live = op != BOTTOM
+            claim = (~found) & live
+
+            @pl.when(claim)
+            def _claim():
+                claim_writes(v, h)
+
+            return (
+                found | live,
+                jnp.where(claim, v, fq),
+                jnp.where(claim, h, fs),
+                nread + issued,
+            )
+
+        n_scan = n_queues if steal else 1
+        zero = (jnp.bool_(False), jnp.int32(0), jnp.int32(0), jnp.int32(0))
+        return jax.lax.fori_loop(0, n_scan, scan_one, zero)
+
+    def cost_extract():
+        """O(1) policy: own-queue probe, then cost-aware victim argmax."""
+        own = jax.lax.rem(p, n_queues)
+        h0 = jnp.maximum(local_head_ref[p, own], head_ref[own])  # RMaxRead
+        op0, issued0 = probe(own, h0, jnp.bool_(True))
+        own_live = op0 != BOTTOM
+
+        @pl.when(own_live)
+        def _take():
+            claim_writes(own, h0)
+
+        if not steal:
+            return own_live, own, h0, issued0
+
+        # Victim selection from plain vector reads — no slot loads.  The
+        # `heads < tails` mask is exact for any state the protocol can
+        # reach (head never passes tail), so an idle program always finds
+        # a claimable victim when one exists; the advisory only *ranks*
+        # the stealable queues, so arbitrary staleness costs ordering,
+        # never progress (max(adv, 1) keeps zeroed advisories claimable).
+        lh = local_head_ref[pl.ds(p, 1), :].reshape(n_queues)
+        heads = jnp.maximum(lh, head_ref[:])
+        stealable = heads < tail_ref[:]
+        score = jnp.where(stealable, jnp.maximum(remaining_ref[:], 1), 0)
+        v = jnp.argmax(score).astype(jnp.int32)
+        can = (~own_live) & (jnp.max(score) > 0)
+        h = heads[v]
+        op, issued = probe(v, h, can)
+        live = can & (op != BOTTOM)
+
+        @pl.when(live)
+        def _steal():
+            claim_writes(v, h)
+
+        found = own_live | live
+        fq = jnp.where(own_live, own, v)
+        fs = jnp.where(own_live, h0, h)
+        return found, fq, fs, issued0 + issued
+
+    zero = (jnp.bool_(False), jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    body = scan_extract if steal_policy == "scan" else cost_extract
+    return jax.lax.cond(idle, body, lambda: zero)
 
 
 def ws_account(
     r, p, fq, fs, tid, cost,
-    taken_ref, clock_ref, work_ref, steals_ref, mult_ref,
-    *, n_queues: int,
+    taken_ref, remaining_ref, clock_ref, work_ref, steals_ref, mult_ref,
+    pool_off_ref=None,
+    *, n_queues: int, pool: bool = False,
 ):
     """Post-execution bookkeeping shared by every task family: announcement
-    row, multiplicity counter, work/steal telemetry, lockstep clock bump."""
+    row, multiplicity counter, work/steal telemetry, lockstep clock bump,
+    and the best-effort advisory decrement (plain read + plain write — a
+    lost or stale update mis-ranks future victims, nothing more)."""
     mult_ref[tid] = mult_ref[tid] + 1
-    taken_ref[fq, fs] = p
+    if pool:
+        taken_ref[pool_off_ref[fq] + fs] = p
+    else:
+        taken_ref[fq, fs] = p
+    remaining_ref[fq] = jnp.maximum(remaining_ref[fq] - cost, 0)
     work_ref[p] = work_ref[p] + cost
     own = jax.lax.rem(p, n_queues)
     steals_ref[p] = steals_ref[p] + jnp.where(fq != own, 1, 0)
@@ -137,33 +260,86 @@ def _generic_ws_kernel(
     n_queues: int,
     capacity: int,
     steal: bool,
+    steal_policy: str,
+    pool: bool,
+    compress: bool,
 ):
     """Scheduler shell around a family ``execute`` body.
 
     Ref layout (positional, fixed by :func:`launch_ws_grid`): N_MUTABLE stale
-    input snapshots, the tasks array, ``n_pure`` family inputs, then the
-    N_MUTABLE live (aliased) output refs.
+    input snapshots, the tasks array, the (static) tails, the pool segment
+    offsets when ``pool``, ``n_pure`` family inputs, then the N_MUTABLE live
+    (aliased) output refs.
     """
     tasks_ref = refs[N_MUTABLE]
-    pure = refs[N_MUTABLE + 1: N_MUTABLE + 1 + n_pure]
-    (head_ref, local_head_ref, taken_ref, clock_ref, work_ref, steals_ref,
-     mult_ref, out_ref) = refs[N_MUTABLE + 1 + n_pure:]
+    tail_ref = refs[N_MUTABLE + 1]
+    off = N_MUTABLE + 2
+    pool_off_ref = refs[off] if pool else None
+    off += int(pool)
+    pure = refs[off: off + n_pure]
+    (head_ref, local_head_ref, taken_ref, remaining_ref, clock_ref, work_ref,
+     steals_ref, scanned_ref, mult_ref, out_ref) = refs[off + n_pure:]
 
     r = pl.program_id(0)
     p = pl.program_id(1)
-    found, fq, fs = ws_try_extract(
-        r, p, head_ref, local_head_ref, tasks_ref, clock_ref,
+
+    def account(fq, fs):
+        rec = functools.partial(
+            _slot_field, tasks_ref, pool_off_ref, fq, fs, pool=pool
+        )
+        execute(rec, pure, out_ref)
+        ws_account(
+            r, p, fq, fs, rec(F_TID), rec(F_COST),
+            taken_ref, remaining_ref, clock_ref, work_ref, steals_ref,
+            mult_ref, pool_off_ref, n_queues=n_queues, pool=pool,
+        )
+
+    if compress:
+        # Round compression (DESIGN.md §3.6): with no thieves there is no
+        # inter-round interleaving to model, so an idle owner drains its
+        # whole queue as one run of consecutive Takes inside a single grid
+        # cell — the clock still charges every tile-slot (identical
+        # makespan/work telemetry to the per-round drain), but the grid
+        # needs O(1) rounds instead of max-queue-cost rounds.
+        assert not steal, "run compression models the no-steal schedule only"
+        own = jax.lax.rem(p, n_queues)
+
+        def probe_own():
+            h = jnp.maximum(local_head_ref[p, own], head_ref[own])
+            op, issued = _probe_slot(
+                tasks_ref, pool_off_ref, tail_ref, own, h, jnp.bool_(True),
+                pool=pool, capacity=capacity,
+            )
+            scanned_ref[p] = scanned_ref[p] + issued
+            return op != BOTTOM, h
+
+        @pl.when(clock_ref[p] <= r)
+        def _drain_run():
+            def cond(carry):
+                return carry[0]
+
+            def body(carry):
+                _, h = carry
+                head_ref[own] = h + 1
+                local_head_ref[p, own] = h + 1
+                account(own, h)
+                return probe_own()
+
+            jax.lax.while_loop(cond, body, probe_own())
+
+        return
+
+    found, fq, fs, nread = ws_try_extract(
+        r, p, head_ref, local_head_ref, tail_ref, remaining_ref, tasks_ref,
+        clock_ref, pool_off_ref,
         n_queues=n_queues, capacity=capacity, steal=steal,
+        steal_policy=steal_policy, pool=pool,
     )
+    scanned_ref[p] = scanned_ref[p] + nread
 
     @pl.when(found)
     def _execute():
-        execute(tasks_ref, fq, fs, pure, out_ref)
-        ws_account(
-            r, p, fq, fs, tasks_ref[fq, fs, F_TID], tasks_ref[fq, fs, F_COST],
-            taken_ref, clock_ref, work_ref, steals_ref, mult_ref,
-            n_queues=n_queues,
-        )
+        account(fq, fs)
 
 
 @dataclass
@@ -176,9 +352,12 @@ class WSRunResult:
     head: np.ndarray        # final shared heads            [n_queues]
     local_head: np.ndarray  # final per-program bounds      [n_programs, n_queues]
     taken: np.ndarray       # announcement rows             [n_queues, capacity]
+                            #   (flat [capacity] on the pool layout)
+    remaining: np.ndarray   # final advisory cost summaries [n_queues]
     clock: np.ndarray       # per-program completion time   [n_programs]
     work: np.ndarray        # tile-slots executed           [n_programs]
     steals: np.ndarray      # successful cross-queue grabs  [n_programs]
+    scanned: np.ndarray     # task-slot probes issued       [n_programs]
     mult: np.ndarray        # per-task execution counts     [n_tasks]
 
     @property
@@ -194,12 +373,41 @@ class WSRunResult:
         """Idle tile-slots: programs waiting while the slowest one finishes."""
         return len(self.work) * self.makespan - self.total_work
 
+    @property
+    def slots_scanned(self) -> int:
+        """Task-slot probes issued across the launch (scan traffic)."""
+        return int(self.scanned.sum())
 
-def default_rounds(state: QueueState, steal: bool) -> int:
-    """Static upper bound on rounds to drain every queue.
+    @property
+    def extractions(self) -> int:
+        """Successful claims.  Exact for launches that started with a fresh
+        multiplicity buffer (every claim bumps one counter)."""
+        return int(self.mult.sum())
 
-    Stealing: Graham's greedy bound ``total/P + max_cost`` (no program idles
-    while any queue is non-empty).  Static: the heaviest queue runs alone.
+    @property
+    def scan_per_extraction(self) -> float:
+        """Slots read per successful extraction — the victim-scan overhead
+        the cost policy exists to collapse."""
+        return self.slots_scanned / max(1, self.extractions)
+
+
+# Rounds the compressed no-steal drain needs: every owner empties its queue
+# in its first idle grid cell; one slack round keeps the bound visibly safe
+# for resumed states.
+STATIC_COMPRESSED_ROUNDS = 2
+
+
+def default_rounds(state: QueueState, steal: bool,
+                   compress_runs: Optional[bool] = None) -> int:
+    """Static upper bound on rounds to drain every queue (DESIGN.md §3.6).
+
+    Stealing: Graham's greedy bound ``ceil(total/P) + max_cost`` — exact for
+    this lockstep model because an idle program *always* claims a task when
+    any queue is non-empty (the scan policy probes every queue; the cost
+    policy's ``head < tail`` victim mask is exact), so no extra slack is
+    needed.  No-steal: run compression drains each owner's queue in its
+    first idle round, so the bound is O(1); without compression the heaviest
+    queue runs alone (``max queue cost`` rounds).
 
     Needs concrete queue contents — trace-built states must pass an explicit
     static worst-case ``rounds`` to the launch (the grid size cannot depend
@@ -211,6 +419,7 @@ def default_rounds(state: QueueState, steal: bool) -> int:
             "the grid is static, so use the family's worst-case bound "
             "(e.g. moe_ws.dispatch.expert_rounds_bound)"
         )
+    compress = (not steal) if compress_runs is None else compress_runs
     costs = queue_costs(state)
     total = int(costs.sum())
     if total == 0:
@@ -219,8 +428,10 @@ def default_rounds(state: QueueState, steal: bool) -> int:
 
     mc = max_cost(state.task_list) if state.task_list else int(costs.max())
     if steal:
-        return -(-total // state.n_programs) + mc + state.n_queues + 8
-    return int(costs.max()) + 8
+        return -(-total // state.n_programs) + mc
+    if compress:
+        return STATIC_COMPRESSED_ROUNDS
+    return int(costs.max())
 
 
 def launch_ws_grid(
@@ -230,21 +441,38 @@ def launch_ws_grid(
     out: jax.Array,
     *,
     steal: bool = True,
+    steal_policy: str = "cost",
     rounds: Optional[int] = None,
     mult: Optional[jax.Array] = None,
+    compress_runs: Optional[bool] = None,
     interpret: bool = True,
 ) -> WSRunResult:
     """Run the persistent WS grid with a family ``execute`` body.
 
-    ``execute(tasks_ref, fq, fs, pure_refs, out_ref)`` performs the tile at
-    queue slot ``(fq, fs)`` and *accumulates* into ``out_ref``; the shell
-    handles extraction and bookkeeping.  ``out``/``mult`` may be carried over
-    from a previous launch (resume / multiplicity drills).
+    ``execute(rec, pure_refs, out_ref)`` performs the claimed tile —
+    ``rec(field)`` reads one field of its task record — and *accumulates*
+    into ``out_ref``; the shell handles extraction and bookkeeping.
+    ``out``/``mult`` may be carried over from a previous launch (resume /
+    multiplicity drills).  ``compress_runs`` defaults to ``not steal``:
+    no-steal launches drain whole owner runs per grid cell (§3.6), steal
+    launches keep the one-extraction-per-round lockstep so thief
+    concurrency stays faithfully modeled.
     """
+    assert steal_policy in STEAL_POLICIES, steal_policy
     P = state.n_programs
-    rounds = default_rounds(state, steal) if rounds is None else rounds
+    compress = (not steal) if compress_runs is None else compress_runs
+    if compress and steal:
+        raise ValueError("compress_runs models the no-steal schedule only")
+    rounds = (
+        default_rounds(state, steal, compress_runs=compress)
+        if rounds is None else rounds
+    )
     n_tasks = max(1, state.n_tasks)
     mult = jnp.zeros((n_tasks,), jnp.int32) if mult is None else mult
+    pool = state.pool_off is not None
+    remaining = state.remaining
+    if remaining is None:
+        remaining = queue_costs(state)
 
     kernel = functools.partial(
         _generic_ws_kernel,
@@ -253,6 +481,9 @@ def launch_ws_grid(
         n_queues=state.n_queues,
         capacity=state.capacity,
         steal=steal,
+        steal_policy=steal_policy,
+        pool=pool,
+        compress=compress,
     )
 
     def full(a):
@@ -262,13 +493,18 @@ def launch_ws_grid(
         jnp.asarray(state.head),
         jnp.asarray(state.local_head),
         jnp.asarray(state.taken),
+        jnp.asarray(remaining, dtype=jnp.int32),
         jnp.zeros((P,), jnp.int32),   # clock
         jnp.zeros((P,), jnp.int32),   # work
         jnp.zeros((P,), jnp.int32),   # steals
+        jnp.zeros((P,), jnp.int32),   # scanned
         jnp.asarray(mult),
         jnp.asarray(out),
     ]
-    pure_arrays = [jnp.asarray(state.tasks)] + [jnp.asarray(a) for a in pure]
+    pure_arrays = [jnp.asarray(state.tasks), jnp.asarray(state.tail)]
+    if pool:
+        pure_arrays.append(jnp.asarray(state.pool_off))
+    pure_arrays += [jnp.asarray(a) for a in pure]
     outs = pl.pallas_call(
         kernel,
         grid=(rounds, P),
@@ -278,7 +514,8 @@ def launch_ws_grid(
         input_output_aliases={i: i for i in range(len(mutable))},
         interpret=interpret,
     )(*mutable, *pure_arrays)
-    head, local_head, taken, clock, work, steals, mult, out = outs
+    (head, local_head, taken, remaining, clock, work, steals, scanned, mult,
+     out) = outs
 
     def host(a):
         # eager launches hand numpy views back to the drills/telemetry;
@@ -290,9 +527,11 @@ def launch_ws_grid(
         head=host(head),
         local_head=host(local_head),
         taken=host(taken),
+        remaining=host(remaining),
         clock=host(clock),
         work=host(work),
         steals=host(steals),
+        scanned=host(scanned),
         mult=host(mult),
     )
 
@@ -302,18 +541,18 @@ def launch_ws_grid(
 
 
 def _attention_execute(
-    tasks_ref, fq, fs, pure, out_ref,
+    rec, pure, out_ref,
     *, bq: int, bk: int, causal: bool, scale: float, g: int,
 ):
     """Flash-attention tile: online-softmax sweep of the task's kv range,
     accumulated into the task's disjoint q-block rows."""
     q_ref, k_ref, v_ref = pure
-    b = tasks_ref[fq, fs, F_B]
-    h = tasks_ref[fq, fs, F_H]
-    qs = tasks_ref[fq, fs, F_QS]
-    ql = tasks_ref[fq, fs, F_QL]
-    kv_end = tasks_ref[fq, fs, F_KV]
-    cost = tasks_ref[fq, fs, F_COST]
+    b = rec(F_B)
+    h = rec(F_H)
+    qs = rec(F_QS)
+    ql = rec(F_QL)
+    kv_end = rec(F_KV)
+    cost = rec(F_COST)
     kh = jax.lax.div(h, g)
 
     qt = q_ref[pl.ds(b, 1), pl.ds(h, 1), pl.ds(qs, bq), :]
@@ -373,9 +612,11 @@ def run_ws_schedule(
     bq: int,
     bk: int,
     steal: bool = True,
+    steal_policy: str = "cost",
     rounds: Optional[int] = None,
     out: Optional[jax.Array] = None,
     mult: Optional[jax.Array] = None,
+    compress_runs: Optional[bool] = None,
     interpret: bool = True,
 ) -> WSRunResult:
     """Launch the attention megakernel over a prepared :class:`QueueState`.
@@ -396,5 +637,6 @@ def run_ws_schedule(
     )
     return launch_ws_grid(
         state, execute, (q, k, v), out,
-        steal=steal, rounds=rounds, mult=mult, interpret=interpret,
+        steal=steal, steal_policy=steal_policy, rounds=rounds, mult=mult,
+        compress_runs=compress_runs, interpret=interpret,
     )

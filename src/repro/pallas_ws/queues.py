@@ -24,14 +24,22 @@ increasing, so no *program* extracts the same slot twice.
 after claiming slot ``s``.  It is diagnostic (multiplicity accounting /
 drills), never consulted by the extraction protocol itself.
 
-Two builders produce the same layout:
+Three builders produce launch-compatible states:
 
 * :func:`make_queue_state` — the host-side Put: concrete tasks laid out with
   numpy before launch (serving's eager paths, the drills);
 * :func:`make_queue_state_jax` — the **traced** Put: fixed-shape candidate
   records compacted on device with jnp ops, so queue construction lives
-  inside ``jit``/``scan``.  The megakernel launch consumes either through
-  the one :func:`repro.pallas_ws.kernel.launch_ws_grid` code path.
+  inside ``jit``/``scan``;
+* :func:`make_pool_queue_state_jax` — the traced Put on the compact
+  **shared-pool** layout (DESIGN.md §3.6): one flat slot pool with dynamic
+  per-queue segment offsets (``pool_off``), cutting the per-queue
+  worst-case padding the dense traced layout pays.
+
+Every state also carries the ``remaining[q]`` advisory cost summaries the
+cost-aware victim selection ranks by (plain writes, stale-tolerant).  The
+megakernel launch consumes any of them through the one
+:func:`repro.pallas_ws.kernel.launch_ws_grid` code path.
 """
 
 from __future__ import annotations
@@ -52,19 +60,35 @@ class QueueState:
     ``task_list``; trace-built states hold jnp values (possibly tracers)
     with ``task_list=None`` and the *static* ``n_tasks_hint`` sizing the
     multiplicity buffer (dead candidate slots keep mult 0).
+
+    ``remaining[q]`` is the advisory per-queue cost summary the cost-aware
+    victim selection ranks by (DESIGN.md §3.6): initialized to the enqueued
+    cost, decremented best-effort by claimants with plain reads/writes.
+    Stale values mis-rank victims but can never change results.
+
+    Two layouts share the class.  The **dense** layout (``pool_off is
+    None``): ``tasks[q, s, :]`` with a static per-queue ``capacity``.  The
+    **shared-pool** layout: ``tasks[j, :]`` is one flat slot pool and queue
+    ``q`` owns the contiguous segment ``[pool_off[q], pool_off[q+1])`` —
+    slot ``(q, s)`` lives at pool index ``pool_off[q] + s`` and ``taken``
+    is flat ``[pool_slots]``.  Segment boundaries are dynamic (trace-built
+    from the router load), so the pool never pays the dense layout's
+    per-queue worst-case padding.
     """
 
-    tasks: np.ndarray        # [n_queues, capacity, TASK_WIDTH]
+    tasks: np.ndarray        # [n_queues, capacity, TASK_WIDTH] | pool: [pool_slots, TASK_WIDTH]
     head: np.ndarray         # [n_queues]
     tail: np.ndarray         # [n_queues]
     local_head: np.ndarray   # [n_programs, n_queues]
-    taken: np.ndarray        # [n_queues, capacity], -1 = not extracted
+    taken: np.ndarray        # [n_queues, capacity] | pool: [pool_slots]; -1 = not extracted
     task_list: Optional[List[TileTask]] = None
     n_tasks_hint: Optional[int] = None
+    remaining: Optional[np.ndarray] = None  # [n_queues] advisory cost summary
+    pool_off: Optional[np.ndarray] = None   # [n_queues + 1] pool segment offsets
 
     @property
     def n_queues(self) -> int:
-        return self.tasks.shape[0]
+        return self.head.shape[0]
 
     @property
     def n_programs(self) -> int:
@@ -72,6 +96,10 @@ class QueueState:
 
     @property
     def capacity(self) -> int:
+        """Global bound on slot indices: per-queue capacity on the dense
+        layout, total pool slots on the shared-pool layout."""
+        if self.pool_off is not None:
+            return self.tasks.shape[0]
         return self.tasks.shape[1]
 
     @property
@@ -79,6 +107,24 @@ class QueueState:
         if self.task_list is not None:
             return len(self.task_list)
         return self.n_tasks_hint or 0
+
+    def queue_array_bytes(self) -> int:
+        """Total bytes of the queue-side arrays (tasks + head/tail +
+        local bounds + announcements + advisory) — the HBM footprint the
+        shared-pool layout exists to shrink."""
+        arrays = [self.tasks, self.head, self.tail, self.local_head,
+                  self.taken]
+        if self.remaining is not None:
+            arrays.append(self.remaining)
+        if self.pool_off is not None:
+            arrays.append(self.pool_off)
+        total = 0
+        for a in arrays:
+            n = 1
+            for d in a.shape:
+                n *= int(d)
+            total += n * 4  # int32 everywhere
+        return total
 
 
 def partition_tasks(
@@ -116,10 +162,12 @@ def make_queue_state(
     cap = max(4, max((len(b) for b in buckets), default=0) + 2)
     arr = np.full((n_queues, cap, TASK_WIDTH), BOTTOM, dtype=np.int32)
     tail = np.zeros((n_queues,), dtype=np.int32)
+    remaining = np.zeros((n_queues,), dtype=np.int32)
     for q, bucket in enumerate(buckets):
         for s, t in enumerate(bucket):
             arr[q, s] = t.encode()
         tail[q] = len(bucket)
+        remaining[q] = sum(t.cost for t in bucket)
     return QueueState(
         tasks=arr,
         head=np.zeros((n_queues,), dtype=np.int32),
@@ -127,6 +175,7 @@ def make_queue_state(
         local_head=np.zeros((n_programs, n_queues), dtype=np.int32),
         taken=np.full((n_queues, cap), -1, dtype=np.int32),
         task_list=list(tasks),
+        remaining=remaining,
     )
 
 
@@ -134,6 +183,16 @@ def queue_costs(state: QueueState) -> np.ndarray:
     """Total tile-slot cost enqueued per queue (the static-schedule load)."""
     from .tasks import F_COST, F_OP
 
+    if state.pool_off is not None:
+        tasks = np.asarray(state.tasks)
+        off = np.asarray(state.pool_off)
+        tail = np.asarray(state.tail)
+        costs = np.zeros((state.n_queues,), dtype=np.int64)
+        live = tasks[:, F_OP] != BOTTOM
+        for q in range(state.n_queues):
+            seg = slice(int(off[q]), int(off[q]) + int(tail[q]))
+            costs[q] = np.where(live[seg], tasks[seg, F_COST], 0).sum()
+        return costs
     live = state.tasks[:, :, F_OP] != BOTTOM
     return np.where(live, state.tasks[:, :, F_COST], 0).sum(axis=1)
 
@@ -199,6 +258,8 @@ def make_queue_state_jax(
     """
     import jax.numpy as jnp
 
+    from .tasks import F_COST
+
     records = jnp.asarray(records, jnp.int32)
     live = jnp.asarray(live)
     n_queues, slots, _ = records.shape
@@ -220,4 +281,48 @@ def make_queue_state_jax(
         taken=jnp.full((n_queues, cap), -1, jnp.int32),
         task_list=None,
         n_tasks_hint=int(n_tasks),
+        remaining=jnp.where(live, records[:, :, F_COST], 0)
+        .sum(axis=1).astype(jnp.int32),
+    )
+
+
+def make_pool_queue_state_jax(
+    records,
+    tail,
+    pool_off,
+    remaining,
+    n_programs: int,
+    *,
+    n_tasks: int,
+) -> QueueState:
+    """Traced Put, shared-pool layout: wrap pre-compacted flat records.
+
+    ``records``: [pool_slots, TASK_WIDTH] task records where queue ``q``'s
+    live slots already occupy the contiguous segment ``[pool_off[q],
+    pool_off[q] + tail[q])`` in queue order, the pool suffix all-⊥ (the
+    builder — e.g. :func:`repro.moe_ws.dispatch.route_to_tasks_pool_jax` —
+    produces exactly this, so no compaction pass is needed).  ``pool_off``:
+    [n_queues + 1] dynamic segment offsets; ``tail``: [n_queues] live slot
+    counts (``tail[q] == pool_off[q+1] - pool_off[q]`` for every non-suffix
+    queue); ``remaining``: [n_queues] initial advisory cost summaries.
+
+    ``n_tasks`` is the static pool slot count sizing the multiplicity
+    buffer — pool slot index == ``tid`` == multiplicity index, so dead
+    suffix slots keep ``mult == 0``.
+    """
+    import jax.numpy as jnp
+
+    records = jnp.asarray(records, jnp.int32)
+    pool_slots = records.shape[0]
+    n_queues = tail.shape[0]
+    return QueueState(
+        tasks=records,
+        head=jnp.zeros((n_queues,), jnp.int32),
+        tail=jnp.asarray(tail, jnp.int32),
+        local_head=jnp.zeros((n_programs, n_queues), jnp.int32),
+        taken=jnp.full((pool_slots,), -1, jnp.int32),
+        task_list=None,
+        n_tasks_hint=int(n_tasks),
+        remaining=jnp.asarray(remaining, jnp.int32),
+        pool_off=jnp.asarray(pool_off, jnp.int32),
     )

@@ -38,27 +38,40 @@ def _cdiv(a: int, b: int) -> int:
 
 @dataclass
 class RaggedStats:
-    """Scheduling telemetry for one launch (units: kv-block tile-slots)."""
+    """Scheduling telemetry for one launch (units: kv-block tile-slots).
+
+    ``slots_scanned``/``scan_per_extraction`` are the victim-scan traffic
+    counters of DESIGN.md §3.6: task-slot probes issued by the extraction
+    path, total and per successful claim."""
 
     schedule: str
+    steal_policy: str
     n_tasks: int
     makespan: int
     total_work: int
     wasted_slots: int
     steals: int
     mult_max: int
+    slots_scanned: int
+    extractions: int
+    scan_per_extraction: float
     queue_loads: list
 
     @classmethod
-    def from_run(cls, schedule, state, res: WSRunResult) -> "RaggedStats":
+    def from_run(cls, schedule, state, res: WSRunResult,
+                 steal_policy: str = "cost") -> "RaggedStats":
         return cls(
             schedule=schedule,
+            steal_policy=steal_policy,
             n_tasks=state.n_tasks,
             makespan=res.makespan,
             total_work=res.total_work,
             wasted_slots=res.wasted_slots,
             steals=int(res.steals.sum()),
             mult_max=int(res.mult[: max(1, state.n_tasks)].max()) if state.n_tasks else 0,
+            slots_scanned=res.slots_scanned,
+            extractions=res.extractions,
+            scan_per_extraction=round(res.scan_per_extraction, 3),
             queue_loads=[int(c) for c in queue_costs(state)],
         )
 
@@ -90,6 +103,7 @@ def ragged_flash_attention(
     *,
     causal: bool = True,
     schedule: str = "ws",
+    steal_policy: str = "cost",
     n_programs: int = 8,
     partition: str = "batch",
     bq: int = 32,
@@ -118,13 +132,14 @@ def ragged_flash_attention(
     res = run_ws_schedule(
         state, qp, kp, vp,
         causal=causal, bq=bq, bk=bk,
-        steal=(schedule == "ws"), interpret=interpret,
+        steal=(schedule == "ws"), steal_policy=steal_policy,
+        interpret=interpret,
     )
     _check_drained(state, res)
     div = multiplicity_divisor(tasks, res.mult, (B, H, qp.shape[2]))
     out = (res.out / jnp.asarray(div)[..., None])[:, :, :S].astype(q.dtype)
     if return_stats:
-        return out, RaggedStats.from_run(schedule, state, res)
+        return out, RaggedStats.from_run(schedule, state, res, steal_policy)
     return out
 
 
@@ -164,11 +179,17 @@ def decode_rounds_bound(B: int, n_heads: int, S: int, bk: int,
                         n_queues: int, n_programs: int, steal: bool) -> int:
     """Static worst-case lockstep rounds for a traced decode launch (every
     slot at full cache length ``S``) — the trace-time stand-in for
-    :func:`repro.pallas_ws.kernel.default_rounds` (cost unit: kv blocks)."""
+    :func:`repro.pallas_ws.kernel.default_rounds` (cost unit: kv blocks).
+
+    Stealing: Graham's ``ceil(total/P) + max_cost`` with no scan slack —
+    both steal policies claim whenever work exists (DESIGN.md §3.6).
+    No-steal: run compression drains owners in their first idle round."""
     blocks = max(1, _cdiv(S, bk))
     if steal:
-        return _cdiv(B * n_heads * blocks, n_programs) + blocks + n_queues + 8
-    return _cdiv(B, n_queues) * n_heads * blocks + 8
+        return _cdiv(B * n_heads * blocks, n_programs) + blocks
+    from .kernel import STATIC_COMPRESSED_ROUNDS
+
+    return STATIC_COMPRESSED_ROUNDS
 
 
 def ragged_decode_attention(
@@ -178,6 +199,7 @@ def ragged_decode_attention(
     lengths,
     *,
     schedule: str = "ws",
+    steal_policy: str = "cost",
     n_programs: int = 8,
     partition: str = "batch",
     bk: int = 64,
@@ -222,7 +244,8 @@ def ragged_decode_attention(
     res = run_ws_schedule(
         state, q4, kp, vp,
         causal=False, bq=1, bk=bk,
-        steal=steal, rounds=rounds, interpret=interpret,
+        steal=steal, steal_policy=steal_policy, rounds=rounds,
+        interpret=interpret,
     )
     if traced:
         # tid = b·H + h is static: the divisor is just the reshaped
@@ -233,7 +256,7 @@ def ragged_decode_attention(
     div = multiplicity_divisor(tasks, res.mult, (B, H, 1))
     out = (res.out / jnp.asarray(div)[..., None])[:, :, 0].astype(q.dtype)
     if return_stats:
-        return out, RaggedStats.from_run(schedule, state, res)
+        return out, RaggedStats.from_run(schedule, state, res, steal_policy)
     return out
 
 

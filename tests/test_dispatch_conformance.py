@@ -53,11 +53,13 @@ from repro.moe_ws.dispatch import (  # noqa: E402
     expert_rounds_bound,
     route_to_tasks,
     route_to_tasks_jax,
+    route_to_tasks_pool_jax,
     row_divisor,
 )
 from repro.moe_ws.expert_kernel import run_moe_schedule  # noqa: E402
 from repro.moe_ws.layer import expert_ffn_nodrop_ref  # noqa: E402
 from repro.pallas_ws.queues import (  # noqa: E402
+    make_pool_queue_state_jax,
     make_queue_state,
     make_queue_state_jax,
     owner_queue_candidates,
@@ -111,17 +113,46 @@ def _traced_state(idx, gates, E, bt, *, under_jit):
         cand, cand_live, P, n_tasks=records.shape[0] * records.shape[1]
     )
     # concrete jnp -> numpy so adversarial drills can mutate heads/bounds
-    for f in ("tasks", "head", "tail", "local_head", "taken"):
+    for f in ("tasks", "head", "tail", "local_head", "taken", "remaining"):
         setattr(state, f, np.asarray(getattr(state, f)))
     return np.asarray(records), np.asarray(live), routed, state
 
 
-def _tid_remap(loads, bt, tiles_per_e):
-    """Host tid (expert-major sequential over live tiles) -> traced tid
-    (static ``e·tiles_per_e + i``)."""
+def _pool_state(idx, gates, E, bt, *, under_jit):
+    """Shared-pool traced Put (route_to_tasks_pool_jax), numpy-ified for the
+    adversarial drills."""
+
+    def build(i, g):
+        return route_to_tasks_pool_jax(i, g, E, bt=bt)
+
+    if under_jit:
+        build = jax.jit(build)
+    records, tail, pool_off, routed = build(idx, gates)
+    state = make_pool_queue_state_jax(
+        records, tail, pool_off, routed.loads, P, n_tasks=records.shape[0]
+    )
+    for f in ("tasks", "head", "tail", "local_head", "taken", "remaining",
+              "pool_off"):
+        setattr(state, f, np.asarray(getattr(state, f)))
+    return np.asarray(records), routed, state
+
+
+def _tid_remap(loads, bt, tiles_per_e, layout="padded"):
+    """Host tid (expert-major sequential over live tiles) -> traced tid.
+
+    Padded layout: static ``e·tiles_per_e + i``.  Pool layout: dynamic pool
+    slot ``toff[e] + i`` with ``toff`` the cumsum of per-expert live tile
+    counts (recomputed host-side from the loads)."""
     remap = []
-    for e, load in enumerate(loads):
-        remap.extend(e * tiles_per_e + i for i in range(_cdiv(int(load), bt)))
+    if layout == "pool":
+        toff = 0
+        for load in loads:
+            n_e = _cdiv(int(load), bt)
+            remap.extend(toff + i for i in range(n_e))
+            toff += n_e
+    else:
+        for e, load in enumerate(loads):
+            remap.extend(e * tiles_per_e + i for i in range(_cdiv(int(load), bt)))
     return np.asarray(remap, dtype=np.int64)
 
 
@@ -197,12 +228,87 @@ def check_fig7_layout_conformance(draw_int):
     assert (np.asarray(routed_j.gates)[~live_rows] == 0).all()
 
 
+def check_pool_layout_conformance(draw_int):
+    """Shared-pool layout (DESIGN.md §3.6): queue ``e``'s pool segment must
+    hold exactly the host layout's live records for expert ``e``, in queue
+    order, with ``tid == pool slot``, an all-⊥ pool suffix, and the routed
+    rows at the compact dynamic offsets."""
+    E, T, k, bt, seed, idx, gates = _routing_from(draw_int)
+    tasks, routed_h, sh = _host_state(idx, gates, E, bt)
+    rec_j, routed_j, sj = _pool_state(idx, gates, E, bt, under_jit=True)
+    rec_e, routed_e, se = _pool_state(idx, gates, E, bt, under_jit=False)
+
+    # jit-built == eager-built, bit for bit
+    np.testing.assert_array_equal(rec_j, rec_e)
+    np.testing.assert_array_equal(sj.tasks, se.tasks)
+    np.testing.assert_array_equal(sj.pool_off, se.pool_off)
+    np.testing.assert_array_equal(
+        np.asarray(routed_j.tok_idx), np.asarray(routed_e.tok_idx)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(routed_j.gates), np.asarray(routed_e.gates)
+    )
+
+    loads = np.bincount(idx.reshape(-1), minlength=E)
+    n_tiles = -(-loads // bt)
+    toff = np.concatenate([[0], np.cumsum(n_tiles)])
+    pool_tiles = _cdiv(T * k, bt) + E
+    assert sj.tasks.shape == (pool_tiles, 8)
+    np.testing.assert_array_equal(sj.pool_off, toff)
+    np.testing.assert_array_equal(sj.tail, n_tiles)
+    np.testing.assert_array_equal(sj.remaining, loads)
+    np.testing.assert_array_equal(np.asarray(routed_j.loads), loads)
+    assert (sj.taken == -1).all() and sj.taken.shape == (pool_tiles,)
+    assert routed_j.n_rows == pool_tiles * bt
+
+    off_h = routed_h.expert_off
+    off_j = np.asarray(routed_j.expert_off)
+    np.testing.assert_array_equal(off_j, toff * bt)
+    for e in range(E):
+        n_e = int(n_tiles[e])
+        assert int(sh.tail[e]) == n_e  # host agrees on live tile counts
+        h_rec = sh.tasks[e, :n_e]
+        j_rec = sj.tasks[toff[e]: toff[e] + n_e]
+        np.testing.assert_array_equal(h_rec[:, F_OP], j_rec[:, F_OP])
+        np.testing.assert_array_equal(h_rec[:, 1], j_rec[:, 1])  # expert
+        np.testing.assert_array_equal(h_rec[:, F_RL], j_rec[:, F_RL])
+        np.testing.assert_array_equal(h_rec[:, F_COST], j_rec[:, F_COST])
+        # row_start agrees relative to each layout's expert offset
+        np.testing.assert_array_equal(
+            h_rec[:, F_RS] - off_h[e], j_rec[:, F_RS] - off_j[e]
+        )
+        # pool tid IS the pool slot index (mult needs no remap table)
+        np.testing.assert_array_equal(
+            j_rec[:, F_TID], toff[e] + np.arange(n_e)
+        )
+        # routed rows carry the same tokens/gates at the compact offsets
+        ln = int(loads[e])
+        np.testing.assert_array_equal(
+            np.asarray(routed_h.tok_idx)[off_h[e]: off_h[e] + ln],
+            np.asarray(routed_j.tok_idx)[off_j[e]: off_j[e] + ln],
+        )
+        np.testing.assert_array_equal(
+            np.asarray(routed_h.gates)[off_h[e]: off_h[e] + ln],
+            np.asarray(routed_j.gates)[off_j[e]: off_j[e] + ln],
+        )
+    # the pool suffix past the last live tile is all-⊥ with gate-0 rows
+    assert (sj.tasks[toff[E]:, F_OP] == BOTTOM).all()
+    live_rows = np.zeros(routed_j.n_rows, dtype=bool)
+    for e in range(E):
+        live_rows[off_j[e]: off_j[e] + int(loads[e])] = True
+    assert (np.asarray(routed_j.gates)[~live_rows] == 0).all()
+    # compactness: the whole point — pool never exceeds ceil(Tk/bt) + E
+    # tiles, vs the padded layout's E · ceil(min(T, Tk)/bt)
+    assert toff[E] <= pool_tiles
+
+
 # ---------------------------------------------------------------------------
 # checks 2+3: adversarial schedules — identical runs, exact combines
 # ---------------------------------------------------------------------------
 
 
-def check_adversarial_schedules(draw_int, draw_bool):
+def check_adversarial_schedules(draw_int, draw_bool, steal_policy="cost",
+                                layout="padded"):
     E, T, k, bt, seed, idx, gates = _routing_from(draw_int)
     d, f = 4, 8
     ks = jax.random.split(jax.random.PRNGKey(seed % 997), 4)
@@ -213,17 +319,21 @@ def check_adversarial_schedules(draw_int, draw_bool):
         jax.random.normal(ks[3], (E, f, d), jnp.float32) / 2.0,
     )
     tasks, routed_h, sh = _host_state(idx, gates, E, bt)
-    _, _, routed_j, sj = _traced_state(idx, gates, E, bt, under_jit=True)
+    if layout == "pool":
+        _, routed_j, sj = _pool_state(idx, gates, E, bt, under_jit=True)
+    else:
+        _, _, routed_j, sj = _traced_state(idx, gates, E, bt, under_jit=True)
 
     loads = np.bincount(idx.reshape(-1), minlength=E)
     tiles_per_e = _cdiv(min(T, T * k), bt)  # top-k: distinct experts/token
-    remap = _tid_remap(loads, bt, tiles_per_e)
+    remap = _tid_remap(loads, bt, tiles_per_e, layout)
     rounds = expert_rounds_bound(T * k, bt, E, P, steal=True)
 
     def launch(state, tok_idx, out=None, mult=None, r=rounds):
         return run_moe_schedule(
             state, x, jnp.asarray(tok_idx), *w, bt=bt, steal=True,
-            rounds=r, out=out, mult=mult, interpret=True,
+            steal_policy=steal_policy, rounds=r, out=out, mult=mult,
+            interpret=True,
         )
 
     res_h = launch(sh, routed_h.tok_idx)
@@ -262,13 +372,14 @@ def check_adversarial_schedules(draw_int, draw_bool):
     mult_h = res_h.mult[: len(tasks)]
     np.testing.assert_array_equal(mult_h, res_j.mult[remap])
     # traced tiles outside the live remap never execute
-    dead = np.setdiff1d(np.arange(E * tiles_per_e), remap)
+    n_mult_j = res_j.mult.shape[0]
+    dead = np.setdiff1d(np.arange(n_mult_j), remap)
     assert (res_j.mult[dead] == 0).all()
     assert (mult_h >= 1).all(), "first launch drained: dropless"
 
     # bit-identical multiplicity-normalized per-row outputs
     div_h = row_divisor(tasks, res_h.mult, routed_h.n_rows)
-    starts_j = jnp.arange(E * tiles_per_e, dtype=jnp.int32) * bt
+    starts_j = jnp.arange(n_mult_j, dtype=jnp.int32) * bt
     div_j = np.asarray(
         divisor_from_tiles(starts_j, bt, res_j.mult, routed_j.n_rows)
     )
@@ -348,10 +459,18 @@ if HAVE_HYPOTHESIS:
         )
 
     @given(data=st.data())
+    def test_pool_layout_conformance(data):
+        check_pool_layout_conformance(
+            lambda lo, hi: data.draw(st.integers(lo, hi))
+        )
+
+    @given(data=st.data())
     def test_adversarial_schedules_identical_runs_and_exact_combines(data):
         check_adversarial_schedules(
             lambda lo, hi: data.draw(st.integers(lo, hi)),
             lambda: data.draw(st.booleans()),
+            steal_policy=data.draw(st.sampled_from(["cost", "scan"])),
+            layout=data.draw(st.sampled_from(["padded", "pool"])),
         )
 
     @given(data=st.data())
@@ -379,9 +498,18 @@ def test_fig7_layout_conformance_seeded(seed):
 
 
 @pytest.mark.parametrize("seed", range(4))
-def test_adversarial_schedules_seeded(seed):
+def test_pool_layout_conformance_seeded(seed):
+    draw_int, _ = _rng_draws(500 + seed)
+    check_pool_layout_conformance(draw_int)
+
+
+@pytest.mark.parametrize("steal_policy", ["cost", "scan"])
+@pytest.mark.parametrize("layout", ["padded", "pool"])
+@pytest.mark.parametrize("seed", range(2))
+def test_adversarial_schedules_seeded(seed, layout, steal_policy):
     draw_int, draw_bool = _rng_draws(100 + seed)
-    check_adversarial_schedules(draw_int, draw_bool)
+    check_adversarial_schedules(draw_int, draw_bool,
+                                steal_policy=steal_policy, layout=layout)
 
 
 @pytest.mark.parametrize("seed", range(4))
