@@ -23,6 +23,11 @@ Reported per skew (units: token-rows of expert FFN, the shared cost model):
                          (replayed with the dense cumsum slotting)
 * ``max_abs_err``      — ws combine vs the dense **no-drop** oracle
 
+Plus ``grad_rows``: jit(grad) through the dispatch's custom VJP at the
+headline skew — wall clock per backward (``grad_dispatch`` dense vs ws) and
+gradient parity vs ``jax.grad`` of the no-drop oracle (gated at fp32
+tolerance; `benchmarks/perf_smoke.py` replays it in CI).
+
 Writes BENCH_moe.json next to this file.  ``--dry-run`` shrinks shapes for
 CI (Pallas interpret mode on CPU).  Exit status 1 when the headline claim
 fails: at skew >= 4 the dense path must be dropping tokens (>0%) while the
@@ -150,6 +155,60 @@ def run_one(T, d, f, E, k, P, bt, cf, skew, seed=0):
     return row
 
 
+def run_grad(T, d, f, E, k, P, bt, skew, seed=0):
+    """Grad-path rows (DESIGN.md §4.5): time ``jit(grad)`` through the ws
+    dispatch's custom VJP — backward as the closed-form dense transpose and
+    as the re-scheduled megakernel launch — and pin its parity against
+    ``jax.grad`` of the no-drop oracle (``max_abs_err`` over every
+    cotangent: gates, x, and all three expert weights)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.moe_ws import expert_ffn_nodrop_ref, expert_ffn_ws
+
+    idx, gates = make_skewed_routing(T, E, k, skew, seed)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (T, d), jnp.float32)
+    wg = jax.random.normal(ks[1], (E, d, f), jnp.float32) / np.sqrt(d)
+    wu = jax.random.normal(ks[2], (E, d, f), jnp.float32) / np.sqrt(d)
+    wd = jax.random.normal(ks[3], (E, f, d), jnp.float32) / np.sqrt(f)
+    args = (jnp.asarray(gates), x, wg, wu, wd)
+
+    def loss_ref(gates, x, wg, wu, wd):
+        return (expert_ffn_nodrop_ref(idx, gates, x, wg, wu, wd) ** 2).sum()
+
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2, 3, 4))(*args)
+
+    rows = []
+    for gd in ("dense", "ws"):
+
+        def loss_ws(gates, x, wg, wu, wd, gd=gd):
+            return (expert_ffn_ws(idx, gates, x, wg, wu, wd, grad_dispatch=gd,
+                                  n_programs=P, bt=bt) ** 2).sum()
+
+        g_fn = jax.jit(jax.grad(loss_ws, argnums=(0, 1, 2, 3, 4)))
+        t0 = time.perf_counter()
+        g = jax.block_until_ready(g_fn(*args))
+        compile_s = time.perf_counter() - t0
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            g = jax.block_until_ready(g_fn(*args))
+            best = min(best, time.perf_counter() - t0)
+        err = max(
+            float(jnp.abs(a - b).max()) for a, b in zip(g, g_ref)
+        )
+        rows.append(
+            dict(
+                grad_dispatch=gd, skew=skew, T=T, E=E, k=k,
+                max_abs_err=err,
+                wall_s=round(best, 4),
+                compile_s=round(compile_s, 3),
+            )
+        )
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--dry-run", action="store_true", help="tiny shapes for CI smoke")
@@ -182,6 +241,14 @@ def main(argv=None):
             f"{row['ws']['mult_max']},{row['ws']['max_abs_err']:.2e}"
         )
 
+    # grad path: jit(grad) through the custom VJP at the headline skew —
+    # wall clock per backward evaluation + parity vs the no-drop oracle
+    grad_rows = run_grad(T, d, f, E, k, P, bt, skew=4.0)
+    print("grad_dispatch,wall_s,compile_s,max_abs_err")
+    for r in grad_rows:
+        print(f"{r['grad_dispatch']},{r['wall_s']},{r['compile_s']},"
+              f"{r['max_abs_err']:.2e}")
+
     # traced-Put audit: the jit-compatible queue construction must lower to
     # plain tensor ops — 0 RMW / 0 locks / 0 fences on Put, Take AND Steal
     # (asserts internally; the rows land in the payload as the record)
@@ -196,6 +263,7 @@ def main(argv=None):
         config=dict(T=T, d=d, f=f, E=E, k=k, n_programs=P, bt=bt,
                     capacity_factor=cf, dry_run=args.dry_run),
         rows=rows,
+        grad_rows=grad_rows,
         traced_put_audit=audit_traced_put(),
     )
     pathlib.Path(args.out).write_text(json.dumps(payload, indent=2))
@@ -210,6 +278,12 @@ def main(argv=None):
     ]
     if bad:
         print(f"[moe_dispatch] ws-dropless claim failed at skew >= 4: {bad}")
+        return 1
+    # grad-path claim: both backward evaluations of the custom VJP match
+    # the no-drop oracle's gradients to fp32 tolerance
+    bad_grad = [r for r in grad_rows if r["max_abs_err"] > 1e-3]
+    if bad_grad:
+        print(f"[moe_dispatch] custom-VJP grad parity failed: {bad_grad}")
         return 1
     return 0
 

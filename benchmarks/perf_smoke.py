@@ -13,7 +13,10 @@ that builds BENCH.json, and compares against the committed BENCH.json
   committed × (1 + tol);
 * the §3.6 scan-traffic reduction and pool queue-bytes ratio must not drop
   below committed × (1 − tol);
-* the pool layout must still reproduce the host-layout ws makespan exactly.
+* the pool layout must still reproduce the host-layout ws makespan exactly;
+* the custom-VJP grad rows must be present (once committed) and match the
+  no-drop oracle's gradients to fp32 tolerance — an absolute gate, since a
+  wrong backward is a correctness bug, not noise.
 
 Exit 1 on any violation (or if a bench's own headline claim already
 failed).  Tolerance defaults to 10% — tight enough to catch a real
@@ -72,6 +75,17 @@ def compare(fresh: dict, committed: dict, tol: float) -> list:
                <= m_old["scan_per_extraction_cost"] * hi,
                f"{m_new['scan_per_extraction_cost']} > "
                f"{m_old['scan_per_extraction_cost']} * {hi}")
+        # grad path (custom VJP): once committed, the rows may never vanish,
+        # and parity vs the no-drop oracle's gradients is an ABSOLUTE gate —
+        # a wrong backward is a correctness bug, not a perf regression
+        if m_old.get("grad") and not m_new.get("grad"):
+            errs.append("moe grad rows: committed reference exists but the "
+                        "fresh dry-run has none — grad bench not run?")
+        for g in m_new.get("grad", []):
+            _check(errs, f"moe grad parity [{g['grad_dispatch']}]",
+                   g["max_abs_err"] <= 1e-3,
+                   f"max_abs_err {g['max_abs_err']} > 1e-3 vs the no-drop "
+                   "oracle gradients")
     p_new = {(r["E"], r["skew"]): r for r in fresh.get("steal_policy", [])}
     p_old = {(r["E"], r["skew"]): r for r in committed.get("steal_policy", [])}
     if p_old and not set(p_new) & set(p_old):

@@ -80,6 +80,14 @@ def summarize(quick: bool) -> dict:
             scan_per_extraction_scan=r["ws_scan"]["scan_per_extraction"],
             max_abs_err=r["ws"]["max_abs_err"],
         )
+        if moe.get("grad_rows"):
+            # custom-VJP grad path: parity vs the no-drop oracle's grads
+            # (perf_smoke gates on presence + fp32-tolerance correctness)
+            out["moe_dispatch"]["grad"] = [
+                {key: g[key] for key in ("grad_dispatch", "max_abs_err",
+                                         "wall_s")}
+                for g in moe["grad_rows"]
+            ]
         if "traced_put_audit" in moe:
             out["traced_put_audit"] = [
                 {k: a[k] for k in ("experiment", "algorithm", "rmws_per_op",

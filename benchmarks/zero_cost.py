@@ -169,6 +169,33 @@ _FORBIDDEN_HLO = (
 )
 
 
+def _fence_free_lowering_row(text: str, label: str, experiment: str,
+                             algorithm: str, n_ops: int) -> Dict:
+    """Scan one jit lowering's StableHLO text for the forbidden
+    synchronization tokens (asserting none) and return its audit row — the
+    single scan/row-schema implementation every audited lowering (forward
+    AND backward) goes through."""
+    import re
+
+    hits = {
+        pat: len(re.findall(pat, text, flags=re.IGNORECASE))
+        for pat in _FORBIDDEN_HLO
+        if re.search(pat, text, flags=re.IGNORECASE)
+    }
+    assert not hits, f"{label} contains synchronization ops: {hits}"
+    return dict(
+        experiment=experiment,
+        algorithm=algorithm,
+        n_ops=n_ops,
+        hlo_bytes=len(text),
+        reads_per_op="traced",  # plain tensor ops only; see hlo scan
+        writes_per_op="traced",
+        rmws_per_op=0,
+        locks_per_op=0,
+        fences_per_op=0,
+    )
+
+
 def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
                      bt: int = 4, n_programs: int = 4) -> List[Dict]:
     """The traced-Put analogue of :func:`audit_fence_free`: lower the whole
@@ -182,6 +209,14 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
     and the vectorized head/tail/argmax victim reads must lower to plain
     tensor ops like everything else.
 
+    Since the dispatch grew its custom VJP (DESIGN.md §4.5) the audit also
+    lowers ``jax.grad`` through ``expert_ffn_ws`` — the VJP's forward
+    launch plus its backward under both ``grad_dispatch="dense"`` (plain
+    gather/scatter transpose) and ``grad_dispatch="ws"`` (the second
+    megakernel launch of per-row transpose tiles) — and holds the whole
+    differentiated pipeline to the same zero-synchronization bar
+    (``grad-dense`` / ``grad-ws`` rows).
+
     The host audit counts instructions through the backend cells; a traced
     Put has no backend cells, so the architecture-independent witness is the
     compiled program text itself: every shared-memory touch the lowering
@@ -189,8 +224,6 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
     never a synchronization primitive.  Returns one row per experiment in
     the bench_zero_cost row format, for BENCH_moe.json / BENCH.json.
     """
-    import re
-
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -261,32 +294,40 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
             jnp.asarray(idx), jnp.asarray(gates), jnp.asarray(x),
             jnp.asarray(wg), jnp.asarray(wu), jnp.asarray(wd),
         ).as_text()
-        hits = {
-            pat: len(re.findall(pat, text, flags=re.IGNORECASE))
-            for pat in _FORBIDDEN_HLO
-            if re.search(pat, text, flags=re.IGNORECASE)
-        }
-        assert not hits, (
-            f"traced Put lowering [{policy}/{layout}] contains "
-            f"synchronization ops: {hits}"
-        )
-        rows.append(
-            dict(
-                experiment=exp,
-                algorithm=f"moe-ws-traced[{policy},{layout}]",
-                n_ops=n_tokens * top_k,
-                hlo_bytes=len(text),
-                reads_per_op="traced",  # plain tensor ops only; see hlo scan
-                writes_per_op="traced",
-                rmws_per_op=0,
-                locks_per_op=0,
-                fences_per_op=0,
+        rows.append(_fence_free_lowering_row(
+            text, f"traced Put lowering [{policy}/{layout}]", exp,
+            f"moe-ws-traced[{policy},{layout}]", n_tokens * top_k,
+        ))
+    # backward lowering: jit(grad) through the custom VJP — forward
+    # megakernel + no-drop-reference transpose, both backward evaluations
+    from repro.moe_ws import expert_ffn_ws
+
+    for gd in ("dense", "ws"):
+
+        def grad_pipeline(gates, x, wg, wu, wd, gd=gd):
+            loss = lambda gates, x, wg, wu, wd: (  # noqa: E731
+                expert_ffn_ws(
+                    idx, gates, x, wg, wu, wd, grad_dispatch=gd,
+                    n_programs=n_programs, bt=bt,
+                ) ** 2
+            ).sum()
+            return jax.grad(loss, argnums=(0, 1, 2, 3, 4))(
+                gates, x, wg, wu, wd
             )
-        )
+
+        text = jax.jit(grad_pipeline).lower(
+            jnp.asarray(gates), jnp.asarray(x),
+            jnp.asarray(wg), jnp.asarray(wu), jnp.asarray(wd),
+        ).as_text()
+        rows.append(_fence_free_lowering_row(
+            text, f"custom-VJP lowering [grad_dispatch={gd}]", f"grad-{gd}",
+            f"moe-ws-vjp[{gd}]", n_tokens * top_k,
+        ))
     print(
         "[zero-cost] traced-put audit OK: moe-ws-traced jit lowering has "
         "0 RMW / 0 locks / 0 fences on put-take and put-steal "
-        "(scan + cost policies, padded + pool layouts)"
+        "(scan + cost policies, padded + pool layouts) and on the "
+        "custom-VJP backward (grad-dense + grad-ws)"
     )
     return rows
 

@@ -3,9 +3,13 @@ work-stealing gradient accumulation -> AdamW/WSD -> async checkpoints.
 
 Default: a ~10M-param llama-family model, 200 steps on CPU (~ minutes),
 loss visibly decreasing.  --big trains a ~100M-param config (same code;
-budget several hours on this 1-core container).
+budget several hours on this 1-core container).  --moe swaps in a tiny
+MoE model; add --moe-dispatch ws to train the **dropless work-stealing**
+expert dispatch end to end (forward megakernel + custom-VJP backward,
+DESIGN.md §4.5) instead of the capacity-dropping dense einsums.
 
     PYTHONPATH=src python examples/train_e2e.py [--big] [--steps 200]
+    PYTHONPATH=src python examples/train_e2e.py --moe --moe-dispatch ws --steps 20
 """
 import argparse, sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -27,15 +31,31 @@ def model_100m():
                        n_heads=10, n_kv_heads=5, d_ff=2560, vocab_size=8192)
 
 
+def model_moe():
+    """Tiny MoE (8 routed top-2 + 1 shared expert) — small enough that the
+    interpret-mode WS megakernel trains in minutes on CPU."""
+    return ModelConfig(name="lm-moe", family="moe", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=1024,
+                       n_experts=8, n_shared_experts=1, top_k=2, moe_d_ff=128)
+
+
 ap = argparse.ArgumentParser()
 ap.add_argument("--big", action="store_true", help="~100M params instead of ~10M")
+ap.add_argument("--moe", action="store_true", help="tiny MoE model instead")
+ap.add_argument("--moe-dispatch", default=None, choices=["dense", "ws"],
+                help="MoE expert dispatch: ws = dropless work-stealing "
+                     "scheduler, trained through its custom VJP")
+ap.add_argument("--moe-grad-dispatch", default=None, choices=["dense", "ws"],
+                help="backward path of the ws dispatch's custom VJP")
 ap.add_argument("--steps", type=int, default=200)
 ap.add_argument("--ws-mode", default="ws-wmult")
 ap.add_argument("--ckpt-dir", default="/tmp/repro_train_e2e")
 args = ap.parse_args()
 
-cfg = model_100m() if args.big else model_10m()
-print(f"model: {cfg.name} ({cfg.param_count()/1e6:.1f}M params), ws-mode={args.ws_mode}")
+cfg = model_moe() if args.moe else (model_100m() if args.big else model_10m())
+print(f"model: {cfg.name} ({cfg.param_count()/1e6:.1f}M params), "
+      f"ws-mode={args.ws_mode}"
+      + (f", moe-dispatch={args.moe_dispatch}" if args.moe_dispatch else ""))
 
 # register the custom config so launch.train can find it
 configs._MOD[cfg.name] = None
@@ -46,6 +66,8 @@ import repro.launch.train as lt
 lt.get_config = repro.configs.get_config
 
 _, losses = train(cfg.name, smoke=True, steps=args.steps, rows=8, seq=128,
+                  moe_dispatch=args.moe_dispatch,
+                  moe_grad_dispatch=args.moe_grad_dispatch,
                   ws_mode=args.ws_mode, n_workers=4, skew=2.0, lr=1e-3,
                   ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10)
 k = max(len(losses) // 10, 1)

@@ -62,7 +62,20 @@ def make_train_step(
     ws_mode in repro.sched.MODES: the batch's leading dim is a FIFO of
     microbatch tasks scheduled by the paper's work-stealing rounds;
     batch["tails"] gives per-worker-queue task counts.
+
+    MoE configs may set ``cfg.moe_dispatch == "ws"``: the loss's expert FFN
+    then runs the dropless work-stealing dispatch forward AND backward —
+    ``value_and_grad`` differentiates through ``moe_ffn_ws``'s custom VJP
+    (the no-drop reference transpose, ``cfg.moe_grad_dispatch`` selecting
+    its evaluation), so no dense fallback ever substitutes on the training
+    path (DESIGN.md §4.5).
     """
+    for knob in ("moe_dispatch", "moe_grad_dispatch"):
+        val = getattr(cfg, knob, "dense")
+        if val not in ("dense", "ws"):
+            # an unknown value would flow to moe_ffn_dispatch and silently
+            # select the capacity-dropping dense path
+            raise ValueError(f"cfg.{knob}={val!r}: expected 'dense' or 'ws'")
 
     def step(state, batch):
         params = state["params"]

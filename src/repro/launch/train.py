@@ -48,6 +48,8 @@ def train(
     steps: int = 100,
     rows: int = 8,
     seq: int = 64,
+    moe_dispatch: str | None = None,
+    moe_grad_dispatch: str | None = None,
     ws_mode: str | None = None,
     n_workers: int = 4,
     tasks_per_worker: int = 2,
@@ -62,6 +64,13 @@ def train(
     log_path: str | None = None,
 ):
     cfg = get_config(arch, smoke=smoke)
+    # MoE archs: "ws" trains the dropless work-stealing dispatch end to end
+    # (forward megakernel + custom-VJP backward, repro.moe_ws); default
+    # keeps whatever the arch config names.
+    if moe_dispatch is not None:
+        cfg = cfg.replace(moe_dispatch=moe_dispatch)
+    if moe_grad_dispatch is not None:
+        cfg = cfg.replace(moe_grad_dispatch=moe_grad_dispatch)
     shape = ShapeConfig("custom", "train", seq, rows)
     opt = make_optimizer(cfg, total_steps=steps, peak_lr=lr)
     params = init_params(jax.random.PRNGKey(seed), cfg)
@@ -127,6 +136,12 @@ def main(argv=None):
     ap.add_argument("--rows", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--ws-mode", default=None)
+    ap.add_argument("--moe-dispatch", default=None, choices=["dense", "ws"],
+                    help="override cfg.moe_dispatch (MoE archs): 'ws' trains "
+                         "the dropless work-stealing dispatch")
+    ap.add_argument("--moe-grad-dispatch", default=None,
+                    choices=["dense", "ws"],
+                    help="backward path of the ws dispatch's custom VJP")
     ap.add_argument("--n-workers", type=int, default=4)
     ap.add_argument("--skew", type=float, default=1.0)
     ap.add_argument("--lr", type=float, default=3e-3)
@@ -144,6 +159,8 @@ def main(argv=None):
         steps=args.steps,
         rows=args.rows,
         seq=args.seq,
+        moe_dispatch=args.moe_dispatch,
+        moe_grad_dispatch=args.moe_grad_dispatch,
         ws_mode=args.ws_mode,
         n_workers=args.n_workers,
         skew=args.skew,

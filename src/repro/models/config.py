@@ -48,11 +48,17 @@ class ModelConfig:
     first_k_dense: int = 0  # leading dense layers (deepseek-v2: 1)
     capacity_factor: float = 1.25
     # "dense" = capacity-dropping dispatch/combine einsums; "ws" = dropless
-    # expert tiles through the repro.moe_ws work-stealing scheduler, eager
-    # AND traced (jit/scan build queues with the traced Put) — dense never
-    # substitutes silently, see moe_ffn_dispatch.  "ws" is forward-only
-    # (inference/serving); differentiated training steps need "dense".
+    # expert tiles through the repro.moe_ws work-stealing scheduler, eager,
+    # traced (jit/scan build queues with the traced Put) AND differentiated
+    # (custom VJP against the no-drop reference transpose, DESIGN.md §4.5)
+    # — dense never substitutes silently, see moe_ffn_dispatch.
     moe_dispatch: str = "dense"
+    # Backward evaluation of the ws dispatch's custom VJP: "dense" = the
+    # closed-form transpose as plain gathers/scatter-adds over the routed
+    # pairs (always available); "ws" = the same transpose re-scheduled as
+    # per-row tiles through a second megakernel launch.  Ignored unless
+    # moe_dispatch == "ws".
+    moe_grad_dispatch: str = "dense"
 
     # -- SSM (mamba2 / zamba2) -------------------------------------------------
     ssm_state: int = 0

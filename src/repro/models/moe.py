@@ -123,14 +123,20 @@ def moe_ffn_dispatch(x, p, cfg, group_size: int = 1024):
     runs the dropless work-stealing path (repro.moe_ws), the explicit
     default ``"dense"`` the capacity-dropping einsum path.
 
-    ``"ws"`` holds for eager AND traced callers: ``moe_ffn_ws`` builds its
-    queues with the traced Put under ``jit``/``scan`` (fixed worst-case
-    shapes, see repro.moe_ws.dispatch), so the capacity-dropping dense path
-    can never silently substitute inside a compiled step — it runs only
-    when the config asks for it by name.
+    ``"ws"`` holds for eager, traced AND differentiated callers:
+    ``moe_ffn_ws`` builds its queues with the traced Put under
+    ``jit``/``scan`` (fixed worst-case shapes, see repro.moe_ws.dispatch)
+    and carries a custom VJP against the no-drop reference transpose
+    (``cfg.moe_grad_dispatch`` picks the backward's evaluation, see
+    repro.moe_ws.layer), so the capacity-dropping dense path can never
+    silently substitute inside a compiled or differentiated step — it runs
+    only when the config asks for it by name.
     """
     if getattr(cfg, "moe_dispatch", "dense") == "ws":
         from repro.moe_ws import moe_ffn_ws
 
-        return moe_ffn_ws(x, p, cfg, group_size)
+        return moe_ffn_ws(
+            x, p, cfg, group_size,
+            grad_dispatch=getattr(cfg, "moe_grad_dispatch", "dense"),
+        )
     return moe_ffn(x, p, cfg, group_size)

@@ -9,7 +9,11 @@ the shared ``pallas_ws`` megakernel machinery (:mod:`expert_kernel`), and
 multiplicity-divisor normalization in the combine makes duplicated tile
 execution harmless (:mod:`layer`) — a **dropless** dispatch whose makespan
 under router skew beats the dropping dense path (benchmarks/moe_dispatch.py).
-See DESIGN.md §4.
+The dispatch is differentiable: a ``jax.custom_vjp`` on the routed-expert
+core backpropagates the closed-form no-drop-reference transpose
+(``grad_dispatch="dense"`` plain gathers/scatters, ``"ws"`` a second
+megakernel launch), so training steps run the scheduler too.
+See DESIGN.md §4 (§4.5 for the VJP).
 
 Attribute access is lazy (PEP 562) so jax-free consumers — the ``moe-ws``
 entry in ``repro.core.ALGORITHMS`` only needs :mod:`dispatch`'s host shim —
@@ -26,10 +30,14 @@ _EXPORTS = {
     "route_to_tasks_jax": "dispatch",
     "route_to_tasks_pool_jax": "dispatch",
     "row_divisor": "dispatch",
+    "grad_out_width": "expert_kernel",
+    "run_moe_grad_schedule": "expert_kernel",
     "run_moe_schedule": "expert_kernel",
     "DispatchStats": "layer",
+    "GRAD_DISPATCHES": "layer",
     "combine_routed": "layer",
     "expert_ffn_nodrop_ref": "layer",
+    "expert_ffn_ws": "layer",
     "moe_ffn_nodrop_ref": "layer",
     "moe_ffn_ws": "layer",
 }

@@ -46,7 +46,7 @@ tests/test_dispatch_conformance.py.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -79,6 +79,12 @@ class RoutedSet:
     n_rows: int             # bt-aligned total rows (>= n_routed)
     n_routed: int           # live rows (== T * top_k)
     n_tokens: int
+    # [n_rows] int32 — inverse routing map: the flat (token·k + choice) pair
+    # index that produced each row, ``n_routed`` on pads.  This is the
+    # residual the differentiable dispatch's backward scatters per-row
+    # cotangents through (row -> (token, choice) gate slot, row -> expert);
+    # ``row_src < n_routed`` doubles as the live-row mask.
+    row_src: Optional[np.ndarray] = None
 
     @property
     def n_experts(self) -> int:
@@ -91,15 +97,16 @@ class RoutedSet:
 
 def _routed_flatten(r: "RoutedSet"):
     return (
-        (r.tok_idx, r.gates, r.expert_off, r.loads),
+        (r.tok_idx, r.gates, r.expert_off, r.loads, r.row_src),
         (r.n_rows, r.n_routed, r.n_tokens),
     )
 
 
 def _routed_unflatten(aux, children):
-    tok_idx, gates, expert_off, loads = children
+    tok_idx, gates, expert_off, loads, row_src = children
     n_rows, n_routed, n_tokens = aux
-    return RoutedSet(tok_idx, gates, expert_off, loads, n_rows, n_routed, n_tokens)
+    return RoutedSet(tok_idx, gates, expert_off, loads, n_rows, n_routed,
+                     n_tokens, row_src)
 
 
 _ROUTED_REGISTERED = False
@@ -146,12 +153,14 @@ def route_to_tasks(
 
     tok_idx = np.zeros(n_rows, dtype=np.int32)
     gate_rows = np.zeros(n_rows, dtype=np.float32)
+    row_src = np.full(n_rows, T * k, dtype=np.int32)
     src = 0
     for e in range(n_experts):
         lo = int(expert_off[e])
         ln = int(loads[e])
         tok_idx[lo: lo + ln] = flat_t[order[src: src + ln]]
         gate_rows[lo: lo + ln] = flat_g[order[src: src + ln]]
+        row_src[lo: lo + ln] = order[src: src + ln]
         src += ln
 
     tasks: List[ExpertTask] = []
@@ -172,6 +181,7 @@ def route_to_tasks(
         n_rows=n_rows,
         n_routed=T * k,
         n_tokens=T,
+        row_src=row_src,
     )
 
 
@@ -243,6 +253,9 @@ def route_to_tasks_jax(idx, gates, n_experts: int, bt: int = 8,
     dest = sorted_e * R + rank
     tok_idx = jnp.zeros((E * R,), jnp.int32).at[dest].set(flat_t[order])
     gate_rows = jnp.zeros((E * R,), jnp.float32).at[dest].set(flat_g[order])
+    row_src = jnp.full((E * R,), Tk, jnp.int32).at[dest].set(
+        order.astype(jnp.int32)
+    )
 
     e_ids = jnp.arange(E, dtype=jnp.int32)[:, None]          # [E, 1]
     i_ids = jnp.arange(tiles_per_e, dtype=jnp.int32)[None, :]  # [1, R/bt]
@@ -270,6 +283,7 @@ def route_to_tasks_jax(idx, gates, n_experts: int, bt: int = 8,
         n_rows=E * R,
         n_routed=Tk,
         n_tokens=T,
+        row_src=row_src,
     )
     return records, live, routed
 
@@ -322,6 +336,9 @@ def route_to_tasks_pool_jax(idx, gates, n_experts: int, bt: int = 8):
     n_rows = pool_tiles * bt
     tok_idx = jnp.zeros((n_rows,), jnp.int32).at[dest].set(flat_t[order])
     gate_rows = jnp.zeros((n_rows,), jnp.float32).at[dest].set(flat_g[order])
+    row_src = jnp.full((n_rows,), Tk, jnp.int32).at[dest].set(
+        order.astype(jnp.int32)
+    )
 
     # per-pool-tile records: tile j belongs to the expert whose segment
     # [toff[e], toff[e+1}) contains j (duplicates in toff — empty experts —
@@ -356,6 +373,7 @@ def route_to_tasks_pool_jax(idx, gates, n_experts: int, bt: int = 8):
         n_rows=n_rows,
         n_routed=Tk,
         n_tokens=T,
+        row_src=row_src,
     )
     return records, n_tiles, toff, routed
 

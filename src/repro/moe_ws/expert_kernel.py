@@ -1,6 +1,6 @@
-"""Expert-tile execution body for the persistent WS megakernel.
+"""Expert-tile execution bodies for the persistent WS megakernel.
 
-One task = ``row_len`` routed rows of one expert's gated FFN:
+Forward: one task = ``row_len`` routed rows of one expert's gated FFN:
 
     gather   x[tok_idx[rs : rs + bt]]                  # [bt, d]
     FFN      silu(x @ wg[e]) * (x @ wu[e]) @ wd[e]     # [bt, f] -> [bt, d]
@@ -13,9 +13,21 @@ whole extra copies of the same rows — ``mult[tid]`` normalizes them out,
 exactly as for attention q-blocks.  Dead pad rows of a ragged tail tile are
 zeroed before the accumulate.
 
+Backward (DESIGN.md §4.5): the *same* tile layout re-scheduled over the
+transpose math.  A grad tile gathers its rows' activations and output
+cotangents, replays the expert FFN, and emits the per-row pieces of the
+no-drop reference VJP — ``d_x`` rows, the hidden-layer cotangents
+``du``/``dv``, the recomputed hiddens ``h``, and the per-row gate cotangent
+— packed side by side in one ``[bt, d + 3f + 1]`` block.  Everything a grad
+tile writes is **per routed row**, hence disjoint across tiles, hence
+idempotent-accumulable under duplication exactly like the forward; the
+per-expert weight-grad reductions (outer-product segment sums over
+``row_src``/experts) happen outside the kernel on the multiplicity-
+normalized rows.
+
 The Take/Steal protocol, the lockstep clocks, and the queue arrays are the
 shared machinery of :mod:`repro.pallas_ws.kernel` — this module only
-supplies the ``execute`` body and the launch wrapper.
+supplies the ``execute`` bodies and the launch wrappers.
 """
 
 from __future__ import annotations
@@ -63,6 +75,117 @@ def _expert_execute(rec, pure, out_ref, *, bt: int):
     # Idempotent-accumulate into this task's disjoint routed-row slice.
     cur = out_ref[pl.ds(rs, bt), :]
     out_ref[pl.ds(rs, bt), :] = cur + yt
+
+
+def dsilu(u, sig):
+    """d/du silu(u) given sig = sigmoid(u) — the one implementation both
+    backward evaluations (the dense transpose and this tile body) share, so
+    their bit-parity cannot drift."""
+    return sig * (1.0 + u * (1.0 - sig))
+
+
+def _expert_grad_execute(rec, pure, out_ref, *, bt: int):
+    """Transpose tile: per-row VJP pieces of one expert tile's gather–FFN.
+
+    Emits ``[dx_row | du | dv | h | dgate]`` (width ``d + 3f + 1``) for the
+    tile's ``bt`` routed rows — every output is per-row, so the accumulate
+    slice is disjoint from every other tile's and duplicated execution is
+    normalized by the same ``mult[tid]`` divisor as the forward."""
+    tok_idx_ref, x_ref, gy_ref, gate_ref, wg_ref, wu_ref, wd_ref = pure
+    e = rec(F_E)
+    rs = rec(F_RS)
+    rl = rec(F_RL)
+
+    d = x_ref.shape[-1]
+    f = wg_ref.shape[-1]
+    idx = tok_idx_ref[pl.ds(rs, bt)]                      # [bt]
+    xt = jnp.take(x_ref[...], idx, axis=0).astype(jnp.float32)   # [bt, d]
+    ct = jnp.take(gy_ref[...], idx, axis=0).astype(jnp.float32)  # [bt, d]
+    gr = gate_ref[pl.ds(rs, bt)].astype(jnp.float32)             # [bt]
+    wg = wg_ref[pl.ds(e, 1)].reshape(d, f).astype(jnp.float32)
+    wu = wu_ref[pl.ds(e, 1)].reshape(d, f).astype(jnp.float32)
+    wd = wd_ref[pl.ds(e, 1)].reshape(f, d).astype(jnp.float32)
+
+    # replay the forward tile (remat: residuals are not hauled through HBM)
+    u = jax.lax.dot_general(xt, wg, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    v = jax.lax.dot_general(xt, wu, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    sig = jax.nn.sigmoid(u)
+    s = u * sig                                           # silu(u)
+    h = s * v
+    yhat = jax.lax.dot_general(h, wd, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # [bt, d]
+
+    # closed-form transpose of gate · (silu(x·wg) ⊙ (x·wu)) · wd
+    dgate = jnp.sum(ct * yhat, axis=-1, keepdims=True)    # [bt, 1]
+    dy = gr[:, None] * ct                                 # [bt, d]
+    dh = jax.lax.dot_general(dy, wd, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)    # [bt, f]
+    dv = dh * s
+    du = dh * v * dsilu(u, sig)
+    dxr = jax.lax.dot_general(du, wg, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    dxr = dxr + jax.lax.dot_general(dv, wu, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+
+    block = jnp.concatenate([dxr, du, dv, h, dgate], axis=1)
+    row_live = jax.lax.broadcasted_iota(jnp.int32, block.shape, 0) < rl
+    block = jnp.where(row_live, block, 0.0)
+
+    cur = out_ref[pl.ds(rs, bt), :]
+    out_ref[pl.ds(rs, bt), :] = cur + block
+
+
+def grad_out_width(d: int, f: int) -> int:
+    """Columns of the grad launch's per-row output block:
+    ``[dx (d) | du (f) | dv (f) | h (f) | dgate (1)]``."""
+    return d + 3 * f + 1
+
+
+def run_moe_grad_schedule(
+    state: QueueState,
+    x,
+    gy,
+    tok_idx,
+    gate_rows,
+    wg,
+    wu,
+    wd,
+    *,
+    bt: int,
+    steal: bool = True,
+    steal_policy: str = "cost",
+    rounds: Optional[int] = None,
+    out: Optional[jax.Array] = None,
+    mult: Optional[jax.Array] = None,
+    compress_runs: Optional[bool] = None,
+    interpret: bool = True,
+) -> WSRunResult:
+    """Launch the transpose (backward) megakernel over a prepared
+    :class:`QueueState` — the second ``launch_ws_grid`` of the custom VJP's
+    ``grad_dispatch="ws"`` path.
+
+    ``gy``: [T, d] cotangent of the combined routed output; ``gate_rows``:
+    [n_padded] per-row combine gates (``RoutedSet.gates``); the rest as
+    :func:`run_moe_schedule`.  ``res.out`` is the per-row VJP block
+    ``[n_padded, grad_out_width(d, f)]`` (mult-weighted accumulation —
+    divide by the tile divisor before use), carried over on relaunch for
+    the multiplicity drills.
+    """
+    n_padded = tok_idx.shape[0]
+    d = x.shape[-1]
+    f = wg.shape[-1]
+    out = (
+        jnp.zeros((n_padded, grad_out_width(d, f)), jnp.float32)
+        if out is None else out
+    )
+    execute = functools.partial(_expert_grad_execute, bt=bt)
+    return launch_ws_grid(
+        state, execute, (tok_idx, x, gy, gate_rows, wg, wu, wd), out,
+        steal=steal, steal_policy=steal_policy, rounds=rounds, mult=mult,
+        compress_runs=compress_runs, interpret=interpret,
+    )
 
 
 def run_moe_schedule(

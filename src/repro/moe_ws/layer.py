@@ -24,9 +24,26 @@ shapes at the static worst case, live masks) — so ``jit(moe_ffn_ws)`` and
 ``scan``-over-layers run the *same dropless dispatch*, not a dense
 fallback.  The two builders are certified equivalent by
 tests/test_dispatch_conformance.py.
+
+The dispatch is **differentiable** (DESIGN.md §4.5): the routed-expert core
+carries a ``jax.custom_vjp`` whose forward runs the megakernel and whose
+backward is the closed-form gather–FFN–scatter transpose of
+:func:`expert_ffn_nodrop_ref` — the no-drop function the scheduler provably
+computes, so its VJP is *the* VJP of the dispatch regardless of which
+steal/duplication schedule the forward happened to execute.  The backward
+restricts the reference transpose to the routed pairs (never O(T·E)):
+``grad_dispatch="dense"`` evaluates it with plain gathers/scatter-adds over
+the flat ``[T·k]`` pair list, ``grad_dispatch="ws"`` re-schedules the
+per-row transpose tiles through a second ``launch_ws_grid`` launch on the
+same shared-pool queue layout (``run_moe_grad_schedule``).  Router gates
+and the aux loss live *outside* the custom VJP, so their gradients flow
+through the ordinary jnp router math unchanged.  Certified by
+tests/test_moe_ws_grad.py.
 """
 
 from __future__ import annotations
+
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,10 +65,11 @@ from .dispatch import (
     route_to_tasks_pool_jax,
     row_divisor,
 )
-from .expert_kernel import run_moe_schedule
+from .expert_kernel import dsilu, run_moe_grad_schedule, run_moe_schedule
 
 SCHEDULES = ("ws", "static")
 QUEUE_LAYOUTS = ("pool", "padded")
+GRAD_DISPATCHES = ("dense", "ws")
 
 
 def _router(x_flat, p, cfg, group_size: int):
@@ -80,23 +98,19 @@ def _shared_experts(x_flat, p):
     return jnp.einsum("tf,fd->td", hs, p["ws_d"])
 
 
-def _under_autodiff(x) -> bool:
-    """True when ``x`` carries a differentiation trace (grad/jvp/vjp).
+class _CoreStatic(NamedTuple):
+    """Hashable launch configuration of the routed-expert core — the
+    nondiff leading argument of the custom VJP (shapes/knobs only, no
+    arrays)."""
 
-    The megakernel's ``pallas_call`` uses input_output_aliases and has no
-    JVP rule, so autodiff through the dispatch dies deep inside jax with an
-    opaque error; peeling the tracer stack lets the layer fail fast with an
-    actionable one instead.  ``jit``/``scan``/``vmap`` tracers pass through
-    untouched.
-    """
-    from jax.interpreters import ad
-
-    t = x
-    while isinstance(t, jax.core.Tracer):
-        if isinstance(t, ad.JVPTracer):
-            return True
-        t = getattr(t, "primal", None)
-    return False
+    n_experts: int
+    schedule: str
+    steal_policy: str
+    queue_layout: Optional[str]
+    grad_dispatch: str
+    n_programs: int
+    bt: int
+    interpret: bool
 
 
 def _check_drained(state, res) -> None:
@@ -156,58 +170,17 @@ def expert_ffn_nodrop_ref(idx, gates, x, wg, wu, wd):
     return (jnp.asarray(gates)[:, :, None] * y_sel).sum(axis=1)
 
 
-def moe_ffn_ws(
-    x,
-    p,
-    cfg,
-    group_size: int = 1024,
-    *,
-    schedule: str = "ws",
-    steal_policy: str = "cost",
-    queue_layout: str | None = None,
-    n_programs: int = 8,
-    bt: int = 8,
-    interpret: bool = True,
-    return_stats: bool = False,
-):
-    """x: [B, S, d] -> (y: [B, S, d], aux_loss scalar) — dropless WS dispatch.
-
-    ``schedule="ws"`` steals; ``"static"`` drains owner queues only (same
-    kernel and cost accounting — the makespan baseline).  ``steal_policy``
-    picks the victim-selection path: ``"cost"`` (default) is the O(1)
-    advisory-ranked argmax, ``"scan"`` the PR-1 full sequential scan
-    (DESIGN.md §3.6).  ``bt`` is the expert-tile row count; ``n_programs``
-    the persistent program count.
-
-    Accepts tracers: under ``jit``/``scan``/``vmap`` the queues are built by
-    the traced Put and the kernel runs the static ``expert_rounds_bound`` —
-    still dropless, no dense fallback anywhere.  ``queue_layout`` selects
-    the traced Put's arrays: ``"pool"`` (the ws default) is the compact
-    shared-pool layout (``ceil(Tk/bt) + E`` tiles total,
-    ``route_to_tasks_pool_jax``), ``"padded"`` the PR-3 per-expert
-    worst-case layout; the static schedule regroups experts onto program
-    queues and always uses ``"padded"``.  ``return_stats`` needs concrete
-    telemetry and is eager-only.
-
-    Forward-only: the megakernel (aliased pallas_call) has no JVP rule, so
-    differentiating through this layer raises — training objectives must
-    select ``cfg.moe_dispatch="dense"`` explicitly (ROADMAP: differentiable
-    dropless dispatch via a custom VJP against the no-drop reference).
-    """
-    assert schedule in SCHEDULES, schedule
-    assert queue_layout in (None,) + QUEUE_LAYOUTS, queue_layout
-    traced = isinstance(x, jax.core.Tracer)
-    if traced and return_stats:
-        raise ValueError("return_stats needs concrete telemetry; call eagerly")
-    if _under_autodiff(x):
-        raise TypeError(
-            "moe_ffn_ws is forward-only (the WS megakernel has no JVP rule): "
-            "use cfg.moe_dispatch='dense' for differentiated training steps"
-        )
-    B, S, d = x.shape
-    E = cfg.n_experts
-    x_flat = x.reshape(B * S, d)
-    probs, gate_vals, idx, aux = _router(x_flat, p, cfg, group_size)
+def _dispatch_and_run(static: _CoreStatic, x_flat, idx, gate_vals, wg, wu, wd):
+    """Put + megakernel launch + multiplicity-normalized combine — the
+    routed-expert core shared by the custom VJP's primal/forward and the
+    telemetry path.  Returns ``(y_routed [T, d] f32, state, res, routed,
+    tasks)``."""
+    E, schedule = static.n_experts, static.schedule
+    n_programs, bt = static.n_programs, static.bt
+    T, k = idx.shape
+    traced = any(
+        isinstance(a, jax.core.Tracer) for a in (x_flat, idx, gate_vals)
+    )
 
     # Put: routing -> expert-tile owner queues.  With stealing every expert
     # gets its own queue (the per-expert token list); the static baseline
@@ -215,7 +188,7 @@ def moe_ffn_ws(
     # round-robin over programs — classic expert parallelism.
     n_queues = E if schedule == "ws" else n_programs
     steal = schedule == "ws"
-    layout = queue_layout
+    layout = static.queue_layout
     if layout is None:
         # the host Put already lays rows out compactly, so "pool" is the
         # *traced* compact layout; eager callers keep the host arrays (full
@@ -245,7 +218,7 @@ def moe_ffn_ws(
                 cand, cand_live, n_programs,
                 n_tasks=records.shape[0] * records.shape[1],
             )
-        rounds = expert_rounds_bound(B * S * cfg.top_k, bt, n_queues, n_programs, steal)
+        rounds = expert_rounds_bound(T * k, bt, n_queues, n_programs, steal)
     else:
         idx_h = np.asarray(jax.device_get(idx))
         gates_h = np.asarray(jax.device_get(gate_vals))
@@ -257,18 +230,299 @@ def moe_ffn_ws(
         state,
         x_flat.astype(jnp.float32),
         routed.tok_idx,
-        p["we_g"], p["we_u"], p["we_d"],
+        wg, wu, wd,
         bt=bt,
         steal=steal,
-        steal_policy=steal_policy,
+        steal_policy=static.steal_policy,
         rounds=rounds,
-        interpret=interpret,
+        interpret=static.interpret,
     )
-    _check_drained(state, res)
 
     # multiplicity-divisor normalization, then the gate-weighted combine:
     # a dropless scatter-add over every routed pair.
     y = combine_routed(routed, tasks, res, bt=bt)
+    return y, state, res, routed, tasks
+
+
+def _core_primal(static: _CoreStatic, x_flat, idx, gate_vals, wg, wu, wd):
+    y, state, res, _, _ = _dispatch_and_run(
+        static, x_flat, idx, gate_vals, wg, wu, wd
+    )
+    _check_drained(state, res)
+    return y
+
+
+def _grad_dense(x_flat, idx, gate_vals, wg, wu, wd, gy):
+    """Closed-form VJP of the no-drop routed-expert function, evaluated
+    directly over the flat ``[T·k]`` routed pair list with plain
+    gathers/scatter-adds — the always-available transpose (no scheduler, no
+    pads, no masks).  Returns ``(dx [T,d], dgates [T,k], dwg, dwu, dwd)``
+    in f32."""
+    T, d = x_flat.shape
+    k = idx.shape[1]
+    f = wg.shape[-1]
+    fe = jnp.asarray(idx, jnp.int32).reshape(-1)
+    ft = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    fg = jnp.asarray(gate_vals, jnp.float32).reshape(-1)
+    xf = jnp.asarray(x_flat, jnp.float32)
+    wg32 = jnp.asarray(wg, jnp.float32)
+    wu32 = jnp.asarray(wu, jnp.float32)
+    wd32 = jnp.asarray(wd, jnp.float32)
+
+    xr = xf[ft]                                   # [Tk, d] gather
+    ct = gy[ft]                                   # [Tk, d] cotangent gather
+    wg_r = wg32[fe]
+    wu_r = wu32[fe]
+    wd_r = wd32[fe]
+    u = jnp.einsum("rd,rdf->rf", xr, wg_r)
+    v = jnp.einsum("rd,rdf->rf", xr, wu_r)
+    sig = jax.nn.sigmoid(u)
+    s = u * sig
+    h = s * v
+    yhat = jnp.einsum("rf,rfd->rd", h, wd_r)      # unweighted pair output
+    dgates = jnp.sum(ct * yhat, axis=-1).reshape(T, k)
+    dy = fg[:, None] * ct
+    dh = jnp.einsum("rd,rfd->rf", dy, wd_r)
+    dv = dh * s
+    du = dh * v * dsilu(u, sig)
+    dxr = (jnp.einsum("rf,rdf->rd", du, wg_r)
+           + jnp.einsum("rf,rdf->rd", dv, wu_r))
+    dx = jnp.zeros((T, d), jnp.float32).at[ft].add(dxr)
+    dwg = jnp.zeros((wg.shape[0], d, f), jnp.float32).at[fe].add(
+        xr[:, :, None] * du[:, None, :]
+    )
+    dwu = jnp.zeros((wu.shape[0], d, f), jnp.float32).at[fe].add(
+        xr[:, :, None] * dv[:, None, :]
+    )
+    dwd = jnp.zeros((wd.shape[0], f, d), jnp.float32).at[fe].add(
+        h[:, :, None] * dy[:, None, :]
+    )
+    return dx, dgates, dwg, dwu, dwd
+
+
+def _grad_ws(static: _CoreStatic, x_flat, idx, gate_vals, wg, wu, wd, gy):
+    """The same transpose with its d-gather/d-FFN tiles re-scheduled through
+    a second fence-free ``launch_ws_grid`` launch (``run_moe_grad_schedule``)
+    on the shared-pool queue layout — per-row outputs are disjoint across
+    tiles, so backward duplication is multiplicity-normalized exactly like
+    the forward, and the weight-grad segment reductions run on the
+    normalized rows."""
+    E, bt, P = static.n_experts, static.bt, static.n_programs
+    T, d = x_flat.shape
+    k = idx.shape[1]
+    f = wg.shape[-1]
+    Tk = T * k
+
+    # re-derive the routing residuals (pure, certified function of the saved
+    # idx/gates — cheaper than hauling the padded queue arrays through the
+    # residual pytree under scan/remat)
+    records, tail, pool_off, routed = route_to_tasks_pool_jax(
+        idx, gate_vals, E, bt=bt
+    )
+    state = make_pool_queue_state_jax(
+        records, tail, pool_off, routed.loads, P, n_tasks=records.shape[0],
+    )
+    rounds = expert_rounds_bound(Tk, bt, E, P, True)
+    res = run_moe_grad_schedule(
+        state, jnp.asarray(x_flat, jnp.float32), gy,
+        routed.tok_idx, routed.gates, wg, wu, wd,
+        bt=bt, steal=True, steal_policy=static.steal_policy, rounds=rounds,
+        interpret=static.interpret,
+    )
+    # an unexecuted grad tile would contribute exactly-zero gradients (the
+    # divisor clamps at 1), so under-provisioning must raise here exactly
+    # as it does on the forward path
+    _check_drained(state, res)
+    return _assemble_row_grads(
+        res, routed, idx, x_flat, gy, bt=bt, d=d, f=f, n_experts=E
+    )
+
+
+def _assemble_row_grads(res, routed, idx, x_flat, gy, *, bt, d, f, n_experts):
+    """Normalize a grad launch's per-row output block by the tile
+    multiplicity divisor, then scatter it into the core's cotangents:
+    ``dx`` by routed row -> token, ``dgates`` by row -> (token, choice) via
+    ``RoutedSet.row_src``, and the per-expert weight grads as outer-product
+    segment sums over the rows' experts.  Split out so the multiplicity
+    drills can drive it on adversarially re-executed launches."""
+    T, k = idx.shape
+    Tk = T * k
+    n_tiles = res.mult.shape[0]
+    starts = jnp.arange(n_tiles, dtype=jnp.int32) * bt
+    div = divisor_from_tiles(starts, bt, res.mult, routed.n_rows)
+    G = jnp.asarray(res.out) / jnp.asarray(div)[:, None]
+    dxr = G[:, :d]
+    du = G[:, d: d + f]
+    dv = G[:, d + f: d + 2 * f]
+    h = G[:, d + 2 * f: d + 3 * f]
+    dgate_rows = G[:, -1]
+
+    tok = jnp.asarray(routed.tok_idx)
+    grow = jnp.asarray(routed.gates, jnp.float32)
+    src = jnp.asarray(routed.row_src)
+    live = src < Tk
+    fe_all = jnp.asarray(idx, jnp.int32).reshape(-1)
+    row_e = jnp.where(live, fe_all[jnp.clip(src, 0, Tk - 1)], 0)
+
+    xr = jnp.asarray(x_flat, jnp.float32)[tok]
+    dy = grow[:, None] * gy[tok]                  # 0 on pad rows (gate 0)
+    dx = jnp.zeros((T, d), jnp.float32).at[tok].add(dxr)
+    dwg = jnp.zeros((n_experts, d, f), jnp.float32).at[row_e].add(
+        xr[:, :, None] * du[:, None, :]
+    )
+    dwu = jnp.zeros((n_experts, d, f), jnp.float32).at[row_e].add(
+        xr[:, :, None] * dv[:, None, :]
+    )
+    dwd = jnp.zeros((n_experts, f, d), jnp.float32).at[row_e].add(
+        h[:, :, None] * dy[:, None, :]
+    )
+    # pad rows scatter their (zero) gate cotangent to the sacrificial slot Tk
+    dgates = (
+        jnp.zeros((Tk + 1,), jnp.float32)
+        .at[jnp.minimum(src, Tk)].add(dgate_rows)[:Tk]
+        .reshape(T, k)
+    )
+    return dx, dgates, dwg, dwu, dwd
+
+
+def _core_fwd(static, x_flat, idx, gate_vals, wg, wu, wd):
+    y = _core_primal(static, x_flat, idx, gate_vals, wg, wu, wd)
+    # residual contract (DESIGN.md §4.5): the routing is a pure certified
+    # function of (idx, gates), so the residuals are exactly the core's
+    # inputs — nothing scheduler-side (queue arrays, mult, schedule order)
+    # may enter the backward.
+    return y, (x_flat, idx, gate_vals, wg, wu, wd)
+
+
+def _core_bwd(static, resids, gy):
+    x_flat, idx, gate_vals, wg, wu, wd = resids
+    gy = jnp.asarray(gy, jnp.float32)
+    if static.grad_dispatch == "ws":
+        dx, dgates, dwg, dwu, dwd = _grad_ws(
+            static, x_flat, idx, gate_vals, wg, wu, wd, gy
+        )
+    else:
+        dx, dgates, dwg, dwu, dwd = _grad_dense(
+            x_flat, idx, gate_vals, wg, wu, wd, gy
+        )
+    d_idx = np.zeros(idx.shape, jax.dtypes.float0)  # int routing: no tangent
+    return (
+        dx.astype(x_flat.dtype),
+        d_idx,
+        dgates.astype(gate_vals.dtype),
+        dwg.astype(wg.dtype),
+        dwu.astype(wu.dtype),
+        dwd.astype(wd.dtype),
+    )
+
+
+_moe_ws_core = jax.custom_vjp(_core_primal, nondiff_argnums=(0,))
+_moe_ws_core.defvjp(_core_fwd, _core_bwd)
+
+
+def expert_ffn_ws(
+    idx,
+    gates,
+    x,
+    wg,
+    wu,
+    wd,
+    *,
+    schedule: str = "ws",
+    steal_policy: str = "cost",
+    queue_layout: str | None = None,
+    grad_dispatch: str = "dense",
+    n_programs: int = 8,
+    bt: int = 8,
+    interpret: bool = True,
+):
+    """Router-free routed-expert core on the WS scheduler — the
+    differentiable twin of :func:`expert_ffn_nodrop_ref` (same argument
+    order, same [T, d] f32 return), carrying the custom VJP.  ``idx`` is
+    integer routing (no tangent); ``gates``/``x``/weights differentiate
+    against the no-drop reference math."""
+    assert schedule in SCHEDULES, schedule
+    assert queue_layout in (None,) + QUEUE_LAYOUTS, queue_layout
+    assert grad_dispatch in GRAD_DISPATCHES, grad_dispatch
+    static = _CoreStatic(
+        n_experts=wg.shape[0], schedule=schedule, steal_policy=steal_policy,
+        queue_layout=queue_layout, grad_dispatch=grad_dispatch,
+        n_programs=n_programs, bt=bt, interpret=bool(interpret),
+    )
+    return _moe_ws_core(
+        static, jnp.asarray(x), jnp.asarray(idx, jnp.int32),
+        jnp.asarray(gates, jnp.float32), wg, wu, wd,
+    )
+
+
+def moe_ffn_ws(
+    x,
+    p,
+    cfg,
+    group_size: int = 1024,
+    *,
+    schedule: str = "ws",
+    steal_policy: str = "cost",
+    queue_layout: str | None = None,
+    grad_dispatch: str = "dense",
+    n_programs: int = 8,
+    bt: int = 8,
+    interpret: bool = True,
+    return_stats: bool = False,
+):
+    """x: [B, S, d] -> (y: [B, S, d], aux_loss scalar) — dropless WS dispatch.
+
+    ``schedule="ws"`` steals; ``"static"`` drains owner queues only (same
+    kernel and cost accounting — the makespan baseline).  ``steal_policy``
+    picks the victim-selection path: ``"cost"`` (default) is the O(1)
+    advisory-ranked argmax, ``"scan"`` the PR-1 full sequential scan
+    (DESIGN.md §3.6).  ``bt`` is the expert-tile row count; ``n_programs``
+    the persistent program count.
+
+    Accepts tracers: under ``jit``/``scan``/``vmap`` the queues are built by
+    the traced Put and the kernel runs the static ``expert_rounds_bound`` —
+    still dropless, no dense fallback anywhere.  ``queue_layout`` selects
+    the traced Put's arrays: ``"pool"`` (the ws default) is the compact
+    shared-pool layout (``ceil(Tk/bt) + E`` tiles total,
+    ``route_to_tasks_pool_jax``), ``"padded"`` the PR-3 per-expert
+    worst-case layout; the static schedule regroups experts onto program
+    queues and always uses ``"padded"``.  ``return_stats`` needs concrete
+    telemetry and is eager-only.
+
+    **Differentiable** (DESIGN.md §4.5): the routed-expert core carries a
+    ``jax.custom_vjp`` whose backward is the closed-form transpose of the
+    no-drop reference restricted to the routed pairs — ``grad_dispatch``
+    selects its evaluation: ``"dense"`` (default) plain gathers/scatters,
+    ``"ws"`` a second megakernel launch over the same tile layout.  Router
+    and aux-loss gradients flow outside the VJP unchanged, so
+    ``jax.grad``/``value_and_grad`` of a loss through this layer — eager,
+    jitted, or scanned-over-layers — trains the dropless dispatch.
+    """
+    assert schedule in SCHEDULES, schedule
+    assert queue_layout in (None,) + QUEUE_LAYOUTS, queue_layout
+    assert grad_dispatch in GRAD_DISPATCHES, grad_dispatch
+    traced = isinstance(x, jax.core.Tracer)
+    if traced and return_stats:
+        raise ValueError("return_stats needs concrete telemetry; call eagerly")
+    B, S, d = x.shape
+    x_flat = x.reshape(B * S, d)
+    probs, gate_vals, idx, aux = _router(x_flat, p, cfg, group_size)
+
+    static = _CoreStatic(
+        n_experts=cfg.n_experts, schedule=schedule, steal_policy=steal_policy,
+        queue_layout=queue_layout, grad_dispatch=grad_dispatch,
+        n_programs=n_programs, bt=bt, interpret=bool(interpret),
+    )
+    if return_stats:
+        # eager telemetry path: same impl, no VJP wrapper in the way
+        y, state, res, _, _ = _dispatch_and_run(
+            static, x_flat, idx, gate_vals, p["we_g"], p["we_u"], p["we_d"]
+        )
+        _check_drained(state, res)
+    else:
+        y = _moe_ws_core(
+            static, x_flat, idx, gate_vals, p["we_g"], p["we_u"], p["we_d"]
+        )
 
     if cfg.n_shared_experts:
         y = y + _shared_experts(x_flat, p).astype(jnp.float32)

@@ -82,11 +82,12 @@ def test_jit_moe_ffn_ws_dropless_at_router_skew():
     )
 
 
-def test_autodiff_through_ws_dispatch_raises_actionable_error():
-    """The megakernel has no JVP rule, so grad through the ws dispatch must
-    fail fast with an error naming the fix (cfg.moe_dispatch='dense') —
-    not jax's deep 'JVP with aliasing not supported' crash, and never a
-    silent fallback."""
+def test_autodiff_through_ws_dispatch_differentiates():
+    """The ws dispatch is no longer forward-only: ``jax.grad`` through
+    ``moe_ffn_dispatch`` with cfg.moe_dispatch='ws' runs the custom VJP
+    (no TypeError, no deep 'JVP with aliasing' crash, and — pinned by
+    tests/test_moe_ws_grad.py — never a silent dense substitution) and its
+    gradients match the no-drop oracle's."""
     cfg = _smoke_cfg(moe_dispatch="ws")
     p, x = _moe_inputs(cfg, B=1, S=4, seed=9)
 
@@ -94,11 +95,19 @@ def test_autodiff_through_ws_dispatch_raises_actionable_error():
         y, aux = moe_ffn_dispatch(xx, p, cfg)
         return jnp.sum(y ** 2) + aux
 
-    with pytest.raises(TypeError, match="forward-only"):
-        jax.grad(loss)(x)
+    def loss_ref(xx):
+        y, aux = moe_ffn_nodrop_ref(xx, p, cfg)
+        return jnp.sum(y ** 2) + aux
+
+    g = jax.grad(loss)(x)
+    g_ref = jax.grad(loss_ref)(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                               rtol=1e-4, atol=1e-4)
     # the idiomatic training shape — value_and_grad inside jit — too
-    with pytest.raises(TypeError, match="forward-only"):
-        jax.jit(jax.value_and_grad(loss))(x)
+    v, gj = jax.jit(jax.value_and_grad(loss))(x)
+    assert np.isfinite(float(v))
+    np.testing.assert_allclose(np.asarray(gj), np.asarray(g_ref),
+                               rtol=1e-4, atol=1e-4)
 
 
 # ---------------------------------------------------------------------------
