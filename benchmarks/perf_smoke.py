@@ -4,7 +4,7 @@ The interpret-mode schedulers are deterministic — makespans, wasted slots,
 and scan-traffic counters are exact replays of the lockstep model — so a
 perf regression shows up as a *number change*, not a noisy timing.  This
 job re-runs the quick grid (`ragged_attention`, `moe_dispatch`,
-`steal_policy`, all ``--dry-run``), summarizes it with the same reducer
+`steal_policy`, `mesh_dispatch`, all ``--dry-run``), summarizes it with the same reducer
 that builds BENCH.json, and compares against the committed BENCH.json
 "smoke" trajectory:
 
@@ -14,6 +14,10 @@ that builds BENCH.json, and compares against the committed BENCH.json
 * the §3.6 scan-traffic reduction and pool queue-bytes ratio must not drop
   below committed × (1 − tol);
 * the pool layout must still reproduce the host-layout ws makespan exactly;
+* the mesh dispatch's speedup over per-device-static sharding must not drop
+  below committed × (1 − tol), its collective bytes must not grow past
+  committed × (1 + tol), and it must stay **bit-identical** to the no-drop
+  oracle — an absolute gate, like the grad rows;
 * the custom-VJP grad rows must be present (once committed) and match the
   no-drop oracle's gradients to fp32 tolerance — an absolute gate, since a
   wrong backward is a correctness bug, not noise.
@@ -51,7 +55,8 @@ def compare(fresh: dict, committed: dict, tol: float) -> list:
     # every committed section must actually be compared — a missing fresh
     # summary (bench not run, dryrun file absent) is a failure, never a
     # silent skip, or the gate would pass vacuously
-    for section in ("ragged_attention", "moe_dispatch", "steal_policy"):
+    for section in ("ragged_attention", "moe_dispatch", "steal_policy",
+                    "mesh_dispatch"):
         if committed.get(section) and not fresh.get(section):
             errs.append(f"{section}: committed reference exists but the "
                         "fresh dry-run summary is missing — bench not run?")
@@ -86,6 +91,20 @@ def compare(fresh: dict, committed: dict, tol: float) -> list:
                    g["max_abs_err"] <= 1e-3,
                    f"max_abs_err {g['max_abs_err']} > 1e-3 vs the no-drop "
                    "oracle gradients")
+    x_new, x_old = fresh.get("mesh_dispatch"), committed.get("mesh_dispatch")
+    if x_new and x_old:
+        _check(errs, "mesh speedup vs static",
+               x_new["speedup_vs_static"] >= x_old["speedup_vs_static"] * lo,
+               f"{x_new['speedup_vs_static']} < "
+               f"{x_old['speedup_vs_static']} * {lo}")
+        _check(errs, "mesh collective bytes",
+               x_new["collective_bytes_measured"]
+               <= x_old["collective_bytes_measured"] * hi,
+               f"{x_new['collective_bytes_measured']} > "
+               f"{x_old['collective_bytes_measured']} * {hi}")
+        # bitwise oracle parity is an absolute gate (correctness, not perf)
+        _check(errs, "mesh oracle parity", x_new["bit_identical"],
+               "mesh-ws output no longer bit-identical to the no-drop oracle")
     p_new = {(r["E"], r["skew"]): r for r in fresh.get("steal_policy", [])}
     p_old = {(r["E"], r["skew"]): r for r in committed.get("steal_policy", [])}
     if p_old and not set(p_new) & set(p_old):
@@ -122,12 +141,18 @@ def main(argv=None):
 
     status = 0
     if not args.no_run:
-        from benchmarks import moe_dispatch, ragged_attention, steal_policy
+        from benchmarks import (
+            mesh_dispatch,
+            moe_dispatch,
+            ragged_attention,
+            steal_policy,
+        )
 
         # each main asserts its own headline claim and rewrites *.dryrun.json
         status |= ragged_attention.main(["--dry-run"])
         status |= moe_dispatch.main(["--dry-run"])
         status |= steal_policy.main(["--dry-run"])
+        status |= mesh_dispatch.main(["--dry-run"])  # re-execs on 8 devices
 
     if not BENCH_JSON.exists():
         print(f"[perf-smoke] {BENCH_JSON} missing — commit the trajectory first")

@@ -10,6 +10,8 @@ Sections:
   [moe]            dropless ws MoE dispatch vs capacity-dropping dense (moe_ws)
   [policy]         cost-aware O(1) victim selection vs sequential scan +
                    shared-pool vs padded traced queue layouts (§3.6)
+  [mesh]           cross-device mesh-ws vs per-device-static expert
+                   sharding on 8 forced host devices (§7)
   [loader]         L2 host pipeline — work-stealing loader throughput
   [roofline]       dry-run roofline table (if results/dryrun.jsonl exists)
 
@@ -94,6 +96,22 @@ def summarize(quick: bool) -> dict:
                                    "locks_per_op", "fences_per_op")}
                 for a in moe["traced_put_audit"]
             ]
+    mesh = _load("BENCH_mesh", quick)
+    if mesh:
+        rows = [r for r in mesh["rows"] if r["skew"] >= 4] or mesh["rows"]
+        r = rows[-1]
+        out["mesh_dispatch"] = dict(
+            D=r["D"],
+            skew=r["skew"],
+            mesh_ws_makespan=r["mesh_ws"]["makespan"],
+            static_makespan=r["static"]["makespan"],
+            speedup_vs_static=round(r["speedup_vs_static"], 3),
+            devices_stole=r["mesh_ws"]["devices_stole"],
+            tiles_stolen=r["mesh_ws"]["tiles_stolen"],
+            collective_bytes_measured=r["collective_bytes"]["measured_mesh_ws"],
+            collective_bytes_analytic=r["collective_bytes"]["analytic_mesh_ws"],
+            bit_identical=r["mesh_ws"]["bit_identical"],
+        )
     policy = _load("BENCH_policy", quick)
     if policy:
         out["steal_policy"] = [
@@ -135,7 +153,7 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--sections",
-        default="zero-cost,spanning-tree,scheduler,ragged,moe,policy,loader,roofline",
+        default="zero-cost,spanning-tree,scheduler,ragged,moe,policy,mesh,loader,roofline",
     )
     args = ap.parse_args(argv)
     sections = set(args.sections.split(","))
@@ -185,7 +203,15 @@ def main(argv=None):
         # or a makespan regression vs the scan policy
         status |= steal_policy.main(["--dry-run"] if args.quick else [])
 
-    if any(s in sections for s in ("ragged", "moe", "policy")):
+    if "mesh" in sections:
+        print("\n== [mesh] cross-device mesh-ws vs per-device-static ==")
+        from . import mesh_dispatch
+
+        # nonzero when mesh-ws fails to beat static sharding at skew >= 4
+        # on 8 forced host devices, or any row loses bitwise oracle parity
+        status |= mesh_dispatch.main(["--dry-run"] if args.quick else [])
+
+    if any(s in sections for s in ("ragged", "moe", "policy", "mesh")):
         compose_bench_json(quick=args.quick)
 
     if "loader" in sections:

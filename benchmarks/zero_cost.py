@@ -217,6 +217,15 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
     differentiated pipeline to the same zero-synchronization bar
     (``grad-dense`` / ``grad-ws`` rows).
 
+    Since the dispatch went cross-device (DESIGN.md §7) the audit also
+    lowers ``expert_ffn_mesh_ws`` — the ``shard_map``-ped two-phase mesh
+    protocol: local drains, ring all-gather advisory exchange, replicated
+    steal plan, psum delivery, pair combine — and holds it to the same bar
+    (``put-steal-mesh`` row).  On a single-device session this audits the
+    degenerate D=1 mesh; the CI ``mesh`` job re-audits on 8 forced host
+    devices, where the collectives actually lower to collective-permute /
+    all-reduce (plain data movement, never synchronization primitives).
+
     The host audit counts instructions through the backend cells; a traced
     Put has no backend cells, so the architecture-independent witness is the
     compiled program text itself: every shared-memory touch the lowering
@@ -323,11 +332,34 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
             text, f"custom-VJP lowering [grad_dispatch={gd}]", f"grad-{gd}",
             f"moe-ws-vjp[{gd}]", n_tokens * top_k,
         ))
+    # mesh lowering: the cross-device dispatch under shard_map — advisory
+    # ring all-gathers, replicated steal plan, psum delivery, pair combine
+    from repro.launch.mesh import make_expert_mesh
+    from repro.mesh_ws import MESH_AXIS, expert_ffn_mesh_ws
+
+    mesh = make_expert_mesh(n_experts)
+    n_dev = mesh.shape[MESH_AXIS]
+
+    def mesh_pipeline(idx, gates, x, wg, wu, wd):
+        return expert_ffn_mesh_ws(
+            idx, gates, x, wg, wu, wd, mesh=mesh, bt=bt,
+            n_programs=n_programs,
+        )
+
+    text = jax.jit(mesh_pipeline).lower(
+        jnp.asarray(idx), jnp.asarray(gates), jnp.asarray(x),
+        jnp.asarray(wg), jnp.asarray(wu), jnp.asarray(wd),
+    ).as_text()
+    rows.append(_fence_free_lowering_row(
+        text, f"mesh dispatch lowering [D={n_dev}]", "put-steal-mesh",
+        f"mesh-ws[D={n_dev}]", n_tokens * top_k,
+    ))
     print(
         "[zero-cost] traced-put audit OK: moe-ws-traced jit lowering has "
         "0 RMW / 0 locks / 0 fences on put-take and put-steal "
-        "(scan + cost policies, padded + pool layouts) and on the "
-        "custom-VJP backward (grad-dense + grad-ws)"
+        "(scan + cost policies, padded + pool layouts), on the "
+        "custom-VJP backward (grad-dense + grad-ws) and on the "
+        f"shard_map mesh dispatch (D={n_dev})"
     )
     return rows
 

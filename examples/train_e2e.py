@@ -8,11 +8,43 @@ MoE model; add --moe-dispatch ws to train the **dropless work-stealing**
 expert dispatch end to end (forward megakernel + custom-VJP backward,
 DESIGN.md §4.5) instead of the capacity-dropping dense einsums.
 
+--devices N forces N host devices (must be set before the first jax init,
+which is why argument parsing precedes every repro import here); with --moe
+it finishes by running the cross-device mesh-ws dispatch
+(moe_dispatch="mesh-ws", forward-only — DESIGN.md §7) over the forced mesh
+and checking it bit-identical to the no-drop oracle.
+
     PYTHONPATH=src python examples/train_e2e.py [--big] [--steps 200]
     PYTHONPATH=src python examples/train_e2e.py --moe --moe-dispatch ws --steps 20
+    PYTHONPATH=src python examples/train_e2e.py --moe --devices 8 --steps 20
 """
 import argparse, sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--big", action="store_true", help="~100M params instead of ~10M")
+ap.add_argument("--moe", action="store_true", help="tiny MoE model instead")
+ap.add_argument("--moe-dispatch", default=None, choices=["dense", "ws"],
+                help="MoE expert dispatch: ws = dropless work-stealing "
+                     "scheduler, trained through its custom VJP")
+ap.add_argument("--moe-grad-dispatch", default=None, choices=["dense", "ws"],
+                help="backward path of the ws dispatch's custom VJP")
+ap.add_argument("--devices", type=int, default=None,
+                help="force N host devices (XLA_FLAGS, set before jax "
+                     "initializes); with --moe also demos the mesh-ws "
+                     "cross-device dispatch after training")
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--ws-mode", default="ws-wmult")
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_e2e")
+args = ap.parse_args()
+
+if args.devices:
+    # must land in the env before anything imports jax — the device count
+    # locks at first init, so no repro import may precede this line
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={args.devices}"
+    ).strip()
 
 import numpy as np
 
@@ -39,19 +71,6 @@ def model_moe():
                        n_experts=8, n_shared_experts=1, top_k=2, moe_d_ff=128)
 
 
-ap = argparse.ArgumentParser()
-ap.add_argument("--big", action="store_true", help="~100M params instead of ~10M")
-ap.add_argument("--moe", action="store_true", help="tiny MoE model instead")
-ap.add_argument("--moe-dispatch", default=None, choices=["dense", "ws"],
-                help="MoE expert dispatch: ws = dropless work-stealing "
-                     "scheduler, trained through its custom VJP")
-ap.add_argument("--moe-grad-dispatch", default=None, choices=["dense", "ws"],
-                help="backward path of the ws dispatch's custom VJP")
-ap.add_argument("--steps", type=int, default=200)
-ap.add_argument("--ws-mode", default="ws-wmult")
-ap.add_argument("--ckpt-dir", default="/tmp/repro_train_e2e")
-args = ap.parse_args()
-
 cfg = model_moe() if args.moe else (model_100m() if args.big else model_10m())
 print(f"model: {cfg.name} ({cfg.param_count()/1e6:.1f}M params), "
       f"ws-mode={args.ws_mode}"
@@ -73,3 +92,20 @@ _, losses = train(cfg.name, smoke=True, steps=args.steps, rows=8, seq=128,
 k = max(len(losses) // 10, 1)
 first, last = float(np.mean(losses[:k])), float(np.mean(losses[-k:]))
 print(f"loss: {first:.3f} -> {last:.3f}  ({'DECREASED' if last < first else 'flat'})")
+
+if args.moe and args.devices and args.devices > 1:
+    # mesh-ws is forward/serving-only (training rejects it), so the
+    # multi-device demo runs after training: the cross-device dispatch on
+    # the forced mesh, checked bit-identical to the no-drop oracle
+    import jax
+    from repro.mesh_ws.selfcheck import run_checks
+
+    n_dev = len(jax.devices())
+    print(f"mesh-ws demo: {n_dev} devices "
+          f"(requested {args.devices}), n_experts=16")
+    rows = run_checks(min(n_dev, args.devices), seeds=2)
+    for r in rows:
+        print(f"  seed={r['seed']} bit_identical={r['bit_identical']} "
+              f"devices_stole={r['devices_stole']} "
+              f"tiles_stolen={r['tiles_stolen']}")
+    assert all(r["bit_identical"] for r in rows), rows

@@ -74,8 +74,13 @@ def make_train_step(
         val = getattr(cfg, knob, "dense")
         if val not in ("dense", "ws"):
             # an unknown value would flow to moe_ffn_dispatch and silently
-            # select the capacity-dropping dense path
-            raise ValueError(f"cfg.{knob}={val!r}: expected 'dense' or 'ws'")
+            # select the capacity-dropping dense path; "mesh-ws" is real but
+            # forward/serving-only (no custom VJP through the cross-device
+            # collectives), so training rejects it too
+            raise ValueError(
+                f"cfg.{knob}={val!r}: expected 'dense' or 'ws' "
+                "(training-capable dispatches; 'mesh-ws' is forward-only)"
+            )
 
     def step(state, batch):
         params = state["params"]

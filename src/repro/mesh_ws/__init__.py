@@ -1,0 +1,64 @@
+"""Cross-device expert-parallel work stealing over a device mesh.
+
+DESIGN.md §7.  Shards ``moe_ws``'s expert queues along the mesh ``"model"``
+axis and lets advisory-idle devices steal remote expert tiles through a
+two-level hierarchy — local megakernel drain, then a replicated
+deterministic steal plan computed from coalesced per-device advisories
+exchanged with ``ppermute``/``psum`` (plain-write summaries + data-parallel
+collectives; no atomics, no fences, no RDMA synchronization)."""
+
+from .advisory import (
+    apply_donation,
+    donated_cost,
+    exchange_payload_bytes,
+    reduce_advisory,
+    ring_allgather,
+)
+from .layer import (
+    MESH_AXIS,
+    TELE_FIELDS,
+    EmulatedDispatch,
+    emulate_mesh_dispatch,
+    expert_ffn_mesh_ws,
+    mesh_dispatch_body,
+    moe_ffn_mesh_ws,
+    phase_rounds,
+)
+from .partition import (
+    LocalPut,
+    expert_shard,
+    local_pool_state,
+    route_local_pool_jax,
+)
+from .steal import (
+    StealPlan,
+    deliver_home,
+    hops_matrix,
+    plan_steals,
+    steal_queue_state,
+)
+
+__all__ = [
+    "MESH_AXIS",
+    "TELE_FIELDS",
+    "EmulatedDispatch",
+    "LocalPut",
+    "StealPlan",
+    "apply_donation",
+    "deliver_home",
+    "donated_cost",
+    "emulate_mesh_dispatch",
+    "exchange_payload_bytes",
+    "expert_ffn_mesh_ws",
+    "expert_shard",
+    "hops_matrix",
+    "local_pool_state",
+    "mesh_dispatch_body",
+    "moe_ffn_mesh_ws",
+    "phase_rounds",
+    "plan_steals",
+    "reduce_advisory",
+    "ring_allgather",
+    "route_local_pool_jax",
+    "steal_queue_state",
+]

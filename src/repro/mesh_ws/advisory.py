@@ -1,0 +1,113 @@
+"""Per-device load advisories: coalesced summaries + collective exchange.
+
+Intra-chip, every program ranks steal victims from the plain-write
+``remaining[q]`` advisory vector — stale reads cost ranking quality, never
+correctness (``steal_policy="cost"``, DESIGN.md §3.6).  The mesh layer
+lifts the same contract one level: each device *reduces* its advisory
+vector to one scalar (total remaining tile-slot cost) after its local
+drain and exchanges that scalar over the mesh axis.  The exchanged view is
+stale by construction — the reducing device keeps draining while the
+collective is in flight — and that is fine for exactly the intra-chip
+reason: advisories only *rank* victims; the thief's actual extraction is
+bounds-checked against the gathered head/tail state, so arbitrary
+staleness degrades locality of the choice, never the answer.
+
+No RDMA, no atomics: the exchange is ``jax.lax.ppermute`` hops (a ring
+all-gather) and ``jax.lax.psum`` — data-parallel collectives that lower to
+``collective-permute``/``all-reduce``, leaving the fence-free audit clean.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ring_allgather(x, axis: str, n_devices: int):
+    """All-gather ``x`` along ``axis`` via D-1 ``ppermute`` hops.
+
+    Returns ``[D, *x.shape]`` with row ``m`` holding device ``m``'s value.
+    Written as an explicit ring (not ``all_gather``) so the collective
+    traffic the benchmark accounts for is exactly D-1 peer-to-peer hops of
+    ``x`` — the shape a TPU torus actually moves.
+    """
+    me = jax.lax.axis_index(axis)
+    x = jnp.asarray(x)
+    buf = jnp.zeros((n_devices,) + x.shape, x.dtype).at[me].set(x)
+    if n_devices == 1:
+        return buf
+    perm = [(i, (i + 1) % n_devices) for i in range(n_devices)]
+
+    def hop(i, carry):
+        buf, cur = carry
+        cur = jax.lax.ppermute(cur, axis, perm)
+        src = (me - i - 1) % n_devices
+        return buf.at[src].set(cur), cur
+
+    buf, _ = jax.lax.fori_loop(0, n_devices - 1, hop, (buf, x))
+    return buf
+
+
+def reduce_advisory(remaining) -> jnp.ndarray:
+    """One device's load summary: total remaining advisory cost, clamped
+    nonnegative per queue first (a queue's advisory may be stale-low but the
+    summary must never let one negative queue cancel another's real load)."""
+    return jnp.maximum(jnp.asarray(remaining), 0).sum().astype(jnp.int32)
+
+
+def donated_cost(put, new_tail) -> jnp.ndarray:
+    """Coalesced advisory correction for donated segments.
+
+    When the replicated steal plan truncates this device's queue tails from
+    ``put.tail`` to ``new_tail``, the tiles in ``[new_tail[e], tail[e])``
+    leave the owner's advisory scope.  Rather than one write per donated
+    tile, sum the donated cost per queue — ONE plain subtraction per queue
+    per dispatch (the same clamp-commutation argument as the kernel's
+    coalesced run write: costs are nonnegative, so
+    ``max(r - Σc, 0) == fold(max(·-c, 0))``).
+    """
+    cost = put.records[:, 7]
+    tail = jnp.asarray(put.tail)
+    donated = (put.tile_index >= new_tail[put.tile_expert]) & (
+        put.tile_index < tail[put.tile_expert]
+    )
+    n_local = tail.shape[0]
+    return jnp.zeros((n_local,), jnp.int32).at[put.tile_expert].add(
+        jnp.where(donated, cost, 0)
+    )
+
+
+def apply_donation(remaining, don_cost) -> jnp.ndarray:
+    """The coalesced plain write: per-queue advisory minus donated cost."""
+    return jnp.maximum(jnp.asarray(remaining) - don_cost, 0)
+
+
+def exchange_payload_bytes(*, n_devices: int, pool_tiles: int, n_local: int,
+                           n_rows: int, n_routed: int, d: int, f: int) -> int:
+    """Analytic per-device collective payload of one mesh dispatch step.
+
+    Counts what the ring moves: the advisory scalar plus the victim-side
+    context (records, heads, tails, offsets, token rows, gates, weight
+    shards), each traversing D-1 hops, plus the two psum deliveries (stolen
+    outputs, multiplicities, pair buffer — psum ≈ 2(D-1)/D · bytes on a
+    ring, rounded up to 2(D-1) hops of the payload/D for the bound).  The
+    benchmark reports this next to the HLO-measured number so the two can
+    be cross-checked.
+    """
+    hops = n_devices - 1
+    i32, f32 = 4, 4
+    gathered = (
+        1 * i32                      # advisory scalar
+        + pool_tiles * 8 * i32       # records
+        + n_local * i32 * 3          # head, tail, toff (toff: n_local+1 ≈)
+        + (n_local + 1) * i32
+        + n_rows * (i32 + f32)       # tok_idx + gates
+        + n_local * d * f * f32 * 2  # wg, wu shards
+        + n_local * f * d * f32      # wd shard
+    )
+    psum_payload = (
+        n_devices * n_rows * d * f32   # stolen-output delivery box
+        + n_devices * pool_tiles * i32  # stolen-mult delivery box
+        + (n_routed + 1) * d * f32     # pair-slot combine buffer
+    )
+    return hops * gathered + 2 * hops * (psum_payload // n_devices)

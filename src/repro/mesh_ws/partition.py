@@ -1,0 +1,147 @@
+"""Expert→device partitioning and the per-device traced Put.
+
+The mesh layer shards the expert axis the way the large configs already do
+(`deepseek_v2_236b`, `kimi_k2_1t_a32b`: experts partitioned along the
+``"model"`` mesh axis): device ``m`` owns the contiguous expert block
+``[m·El, (m+1)·El)`` with ``El = E // D``.  Every device sees the *full*
+replicated routing ``(idx, gates)`` and Puts only its own experts' pairs —
+a masked variant of ``route_to_tasks_pool_jax`` where non-local pairs land
+in a dead sacrificial bucket (gate 0, ``row_src = T·k``) so shapes stay
+static and the foreign rows vanish from every downstream reduction.
+
+Expert indices inside the device pool are **local** (``0..El-1``) so the
+shard of the weight arrays (``[El, d, f]`` under ``P("model")``) indexes
+directly — and so a thief executing a stolen remote segment can feed the
+victim's gathered weight shard to the same kernel unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.moe_ws.dispatch import RoutedSet, _register_routed_pytree
+from repro.pallas_ws.queues import QueueState, make_pool_queue_state_jax
+from repro.pallas_ws.tasks import BOTTOM, OP_EXPERT_TILE
+
+_register_routed_pytree()
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def expert_shard(n_experts: int, n_devices: int) -> int:
+    """Experts per device; the partition is even or it is a config error."""
+    if n_devices < 1:
+        raise ValueError(f"need >= 1 device, got {n_devices}")
+    if n_experts % n_devices:
+        raise ValueError(
+            f"n_experts={n_experts} not divisible by mesh size {n_devices}; "
+            "pick a mesh whose model axis divides the expert count"
+        )
+    return n_experts // n_devices
+
+
+class LocalPut(NamedTuple):
+    """Arrays of one device's masked pool Put (all shapes static).
+
+    ``records``/``tail``/``toff`` feed ``make_pool_queue_state_jax``;
+    ``tile_expert``/``tile_index`` locate each pool tile inside its (local)
+    expert segment — the donation accounting in ``advisory.py`` re-derives
+    per-queue donated cost from them with no extra collective."""
+
+    records: jnp.ndarray      # [pool_tiles, 8] task rows, LOCAL expert ids
+    tail: jnp.ndarray         # [El] live tile count per local expert queue
+    toff: jnp.ndarray         # [El+2] tile-offset prefix (incl. foreign blk)
+    routed: RoutedSet         # row-space views (tok_idx/gates/row_src/...)
+    tile_expert: jnp.ndarray  # [pool_tiles] owning local expert of tile j
+    tile_index: jnp.ndarray   # [pool_tiles] tile rank inside that segment
+
+
+def route_local_pool_jax(idx, gates, n_experts: int, lo, n_local: int,
+                         bt: int) -> LocalPut:
+    """Masked per-device traced Put over experts ``[lo, lo+n_local)``.
+
+    Same shared-pool layout as ``route_to_tasks_pool_jax`` restricted to the
+    local experts, plus one sacrificial bucket (key ``n_local``) holding
+    every foreign pair: its rows get gate 0 and ``row_src = T·k`` so the
+    pair-slot combine and the gradient scatters drop them, and its tiles are
+    never recorded (``live = j < toff[n_local]``), so no queue ever serves
+    them.  ``lo`` may be traced (it is ``axis_index * El`` under shard_map);
+    ``n_local``/``bt`` are static.
+    """
+    idx = jnp.asarray(idx, jnp.int32)
+    gates = jnp.asarray(gates, jnp.float32)
+    T, k = idx.shape
+    Tk = T * k
+    flat_e = idx.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    flat_g = gates.reshape(-1)
+    local = (flat_e >= lo) & (flat_e < lo + n_local)
+    key = jnp.where(local, flat_e - lo, n_local)
+    order = jnp.argsort(key, stable=True)
+    sorted_key = key[order]
+    loads_all = jnp.zeros((n_local + 1,), jnp.int32).at[key].add(1)
+    start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(loads_all)[:-1]]
+    )
+    rank = jnp.arange(Tk, dtype=jnp.int32) - start[sorted_key]
+    loads = loads_all[:n_local]
+
+    # static worst case: every local expert half-full plus the foreign block
+    pool_tiles = _cdiv(Tk, bt) + n_local + 1
+    n_tiles = (loads_all + bt - 1) // bt
+    toff = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(n_tiles).astype(jnp.int32)]
+    )
+    row_off = toff * bt                      # [El+2]; entry El = foreign blk
+    dest = row_off[sorted_key] + rank
+    n_rows = pool_tiles * bt
+    loc_s = local[order]
+    tok_idx = jnp.zeros((n_rows,), jnp.int32).at[dest].set(flat_t[order])
+    gate_rows = jnp.zeros((n_rows,), jnp.float32).at[dest].set(
+        jnp.where(loc_s, flat_g[order], 0.0)
+    )
+    row_src = jnp.full((n_rows,), Tk, jnp.int32).at[dest].set(
+        jnp.where(loc_s, order.astype(jnp.int32), Tk)
+    )
+
+    j = jnp.arange(pool_tiles, dtype=jnp.int32)
+    tile_expert = jnp.clip(
+        jnp.searchsorted(toff, j, side="right").astype(jnp.int32) - 1,
+        0, n_local - 1,
+    )
+    tile_index = j - toff[tile_expert]
+    live = j < toff[n_local]
+    rl = jnp.where(live, jnp.clip(loads[tile_expert] - tile_index * bt, 0, bt), 0)
+    bot = jnp.full((pool_tiles,), BOTTOM, jnp.int32)
+    records = jnp.stack(
+        [
+            jnp.where(live, jnp.int32(OP_EXPERT_TILE), jnp.int32(BOTTOM)),
+            jnp.where(live, tile_expert, jnp.int32(BOTTOM)),  # LOCAL expert
+            j * bt,     # row_start: tile j statically owns rows [j·bt, ...)
+            rl,         # row_len
+            bot, bot,
+            j,          # tid == pool slot index
+            rl,         # cost
+        ],
+        axis=-1,
+    )
+    routed = RoutedSet(
+        tok_idx=tok_idx, gates=gate_rows, expert_off=row_off[: n_local + 1],
+        loads=loads, n_rows=n_rows, n_routed=Tk, n_tokens=T, row_src=row_src,
+    )
+    return LocalPut(
+        records=records, tail=n_tiles[:n_local], toff=toff, routed=routed,
+        tile_expert=tile_expert, tile_index=tile_index,
+    )
+
+
+def local_pool_state(put: LocalPut, n_programs: int) -> QueueState:
+    """Fresh QueueState over one device's local pool (phase-1 launch)."""
+    return make_pool_queue_state_jax(
+        put.records, put.tail, put.toff[: put.tail.shape[0] + 1],
+        put.routed.loads, n_programs, n_tasks=put.records.shape[0],
+    )

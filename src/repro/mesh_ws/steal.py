@@ -1,0 +1,163 @@
+"""Remote victim ranking, stolen-segment transfer, donation accounting.
+
+The cross-device Steal is the paper's Steal lifted one level, with one
+twist that keeps the whole thing fence-free: the plan is **replicated**.
+Every device holds the same exchanged advisories and the same gathered
+head/tail snapshots, so every device runs the identical deterministic
+planning loop (a static sweep over device ids) and arrives at the *same*
+assignment — thief ``t`` takes the tail half-run of each queue of its
+best-scored victim, successive thieves see tails already truncated by
+earlier (lower-id) thieves.  Consequences:
+
+* stolen segments are **disjoint** across thieves and disjoint from the
+  victim's retained prefix, so a clean run has multiplicity <= 1 per tile
+  and the normalized combine is bit-identical to the no-drop oracle;
+* the victim needs no message to learn what it donated — it reads its own
+  truncated tails out of the replicated plan and issues the coalesced
+  advisory correction locally (zero extra collectives for donation
+  accounting);
+* staleness stays harmless: the plan is computed from a snapshot, and a
+  victim that drained past the snapshot's head simply hands over a short
+  (possibly empty) segment — the thief's launch bounds-checks against
+  ``s_head >= s_tail`` and no-ops, exactly like an intra-chip thief losing
+  a race to a stale head.
+
+Victim ranking is locality-weighted (*On the Efficiency of Localized Work
+Stealing*, arXiv:1804.04773): ``score(v) = advisory(v) - alpha·hops(t, v)``
+— prefer loaded victims, discount by ring distance, since a steal from a
+far device pays proportionally more interconnect time for the operand
+transfer.  ``alpha`` is in tile-slot units per hop.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.pallas_ws.queues import QueueState
+
+INF = jnp.int32(1 << 30)
+
+
+def hops_matrix(n_devices: int) -> jnp.ndarray:
+    """Ring distance between devices: ``hops[t, v]`` peer hops t→v."""
+    ids = jnp.arange(n_devices, dtype=jnp.int32)
+    fwd = (ids[None, :] - ids[:, None]) % n_devices
+    bwd = (ids[:, None] - ids[None, :]) % n_devices
+    return jnp.minimum(fwd, bwd).astype(jnp.int32)
+
+
+class StealPlan(NamedTuple):
+    """One device's slice of the replicated plan.
+
+    ``victim``/``stole`` describe this device *as thief*; ``s_head`` /
+    ``s_tail`` bound its stolen per-queue segments of the victim's pool
+    (empty when ``stole`` is False).  ``new_tail`` describes this device
+    *as victim*: its own queue tails after all donations this round."""
+
+    victim: jnp.ndarray    # scalar i32: device whose segment we execute
+    stole: jnp.ndarray     # scalar bool: did this device steal at all
+    s_head: jnp.ndarray    # [El] stolen segment start (victim tile index)
+    s_tail: jnp.ndarray    # [El] stolen segment end
+    new_tail: jnp.ndarray  # [El] own tails after donation truncation
+    take_tiles: jnp.ndarray  # scalar i32: tiles this device stole
+
+
+def plan_steals(adv, g_head, g_tail, me, *, n_devices: int, bt: int,
+                alpha: int = 1) -> StealPlan:
+    """The replicated planning sweep.  All inputs are post-exchange
+    snapshots identical on every device: ``adv [D]`` advisory scalars,
+    ``g_head [D, El]`` per-queue head snapshots, ``g_tail [D, El]`` queue
+    tails.  ``me`` is this device's mesh index (the only non-replicated
+    input — it selects which slice of the plan to return).
+
+    Thieves are the advisory-idle devices; they plan in device-id order
+    (a static python loop — D is a mesh constant), each choosing the victim
+    maximizing ``advisory - alpha·hops`` and taking the tail half of every
+    remaining queue segment (``ceil(rem/2)`` tiles — the classic half-run
+    steal).  Earlier thieves' takes update the working tails and
+    advisories, so later thieves see them and plans never overlap."""
+    adv = jnp.asarray(adv, jnp.int32)
+    g_head = jnp.asarray(g_head, jnp.int32)
+    g_tail = jnp.asarray(g_tail, jnp.int32)
+    n_local = g_tail.shape[1]
+    ids = jnp.arange(n_devices, dtype=jnp.int32)
+    hops = hops_matrix(n_devices)
+
+    cur_tail = g_tail
+    adv_cur = adv
+    victim = jnp.int32(0)
+    stole = jnp.bool_(False)
+    s_head = jnp.zeros((n_local,), jnp.int32)
+    s_tail = jnp.zeros((n_local,), jnp.int32)
+    take_tiles = jnp.int32(0)
+    for t in range(n_devices):
+        idle_t = adv[t] == 0
+        score = adv_cur - alpha * hops[t]
+        score = jnp.where(ids == t, -INF, score)
+        score = jnp.where(adv_cur > 0, score, -INF)
+        v = jnp.argmax(score).astype(jnp.int32)
+        can_t = idle_t & (jnp.max(score) > -INF)
+        rem = jnp.maximum(cur_tail[v] - jnp.maximum(g_head[v], 0), 0)
+        take = jnp.where(can_t, (rem + 1) // 2, 0)
+        h_mid = cur_tail[v] - take
+        if_me = can_t & (me == t)
+        victim = jnp.where(if_me, v, victim)
+        stole = stole | if_me
+        s_head = jnp.where(if_me, h_mid, s_head)
+        s_tail = jnp.where(if_me, cur_tail[v], s_tail)
+        take_tiles = jnp.where(if_me, jnp.sum(take), take_tiles)
+        cur_tail = cur_tail.at[v].set(jnp.where(can_t, h_mid, cur_tail[v]))
+        adv_cur = adv_cur.at[v].add(jnp.where(can_t, -jnp.sum(take) * bt, 0))
+    return StealPlan(
+        victim=victim, stole=stole, s_head=s_head, s_tail=s_tail,
+        new_tail=cur_tail[me], take_tiles=take_tiles,
+    )
+
+
+def steal_queue_state(g_records, g_toff, plan: StealPlan, *,
+                      n_programs: int, pool_tiles: int,
+                      bt: int) -> QueueState:
+    """Queue state for the thief's launch over the victim's gathered pool.
+
+    A fresh view of the stolen segments only: shared heads start at
+    ``s_head``, tails at ``s_tail`` (no other tile is visible), local heads
+    and announcements fresh.  Records carry the victim's LOCAL expert ids,
+    so the thief feeds the victim's gathered weight shard directly.  A
+    non-thief gets ``s_head == s_tail == 0`` — every probe misses and the
+    launch is a bounded no-op."""
+    n_local = plan.s_head.shape[0]
+    return QueueState(
+        tasks=g_records[plan.victim],
+        head=plan.s_head,
+        tail=plan.s_tail,
+        local_head=jnp.zeros((n_programs, n_local), jnp.int32),
+        taken=jnp.full((pool_tiles,), -1, jnp.int32),
+        task_list=None,
+        n_tasks_hint=pool_tiles,
+        remaining=(plan.s_tail - plan.s_head) * bt,
+        pool_off=g_toff[plan.victim],
+    )
+
+
+def deliver_home(out_s, mult_s, plan: StealPlan, axis: str, *,
+                 n_devices: int):
+    """Route stolen contributions back to their home device: each thief
+    drops its launch output into the box row addressed by its victim, one
+    ``psum`` merges the boxes, and each device reads its own row.  Disjoint
+    stolen segments mean every (row, element) has at most one nonzero
+    contributor, so the reduction is exact in any order."""
+    me = jax.lax.axis_index(axis)
+    n_rows, d = out_s.shape
+    pool_tiles = mult_s.shape[0]
+    out_box = jnp.zeros((n_devices, n_rows, d), jnp.float32).at[
+        plan.victim
+    ].set(jnp.where(plan.stole, out_s, 0.0))
+    mult_box = jnp.zeros((n_devices, pool_tiles), jnp.int32).at[
+        plan.victim
+    ].set(jnp.where(plan.stole, mult_s, 0))
+    out_in = jax.lax.psum(out_box, axis)[me]
+    mult_in = jax.lax.psum(mult_box, axis)[me]
+    return out_in, mult_in

@@ -51,7 +51,10 @@ class ModelConfig:
     # expert tiles through the repro.moe_ws work-stealing scheduler, eager,
     # traced (jit/scan build queues with the traced Put) AND differentiated
     # (custom VJP against the no-drop reference transpose, DESIGN.md §4.5)
-    # — dense never substitutes silently, see moe_ffn_dispatch.
+    # — dense never substitutes silently, see moe_ffn_dispatch.  "mesh-ws" =
+    # the same dropless dispatch sharded over a device mesh (repro.mesh_ws,
+    # DESIGN.md §7): experts partitioned along the "model" axis, idle
+    # devices steal remote expert tiles; forward/serving-only.
     moe_dispatch: str = "dense"
     # Backward evaluation of the ws dispatch's custom VJP: "dense" = the
     # closed-form transpose as plain gathers/scatter-adds over the routed

@@ -120,8 +120,11 @@ def moe_ffn(x, p, cfg, group_size: int = 1024):
 
 def moe_ffn_dispatch(x, p, cfg, group_size: int = 1024):
     """Route through the cfg-selected dispatch: ``cfg.moe_dispatch == "ws"``
-    runs the dropless work-stealing path (repro.moe_ws), the explicit
-    default ``"dense"`` the capacity-dropping einsum path.
+    runs the dropless work-stealing path (repro.moe_ws),
+    ``"mesh-ws"`` the cross-device expert-parallel scheduler
+    (repro.mesh_ws: expert queues sharded over the mesh "model" axis, idle
+    devices steal remote expert tiles), the explicit default ``"dense"``
+    the capacity-dropping einsum path.
 
     ``"ws"`` holds for eager, traced AND differentiated callers:
     ``moe_ffn_ws`` builds its queues with the traced Put under
@@ -130,13 +133,19 @@ def moe_ffn_dispatch(x, p, cfg, group_size: int = 1024):
     (``cfg.moe_grad_dispatch`` picks the backward's evaluation, see
     repro.moe_ws.layer), so the capacity-dropping dense path can never
     silently substitute inside a compiled or differentiated step — it runs
-    only when the config asks for it by name.
+    only when the config asks for it by name.  ``"mesh-ws"`` is
+    forward/serving-only (launch.steps rejects it for training).
     """
-    if getattr(cfg, "moe_dispatch", "dense") == "ws":
+    dispatch = getattr(cfg, "moe_dispatch", "dense")
+    if dispatch == "ws":
         from repro.moe_ws import moe_ffn_ws
 
         return moe_ffn_ws(
             x, p, cfg, group_size,
             grad_dispatch=getattr(cfg, "moe_grad_dispatch", "dense"),
         )
+    if dispatch == "mesh-ws":
+        from repro.mesh_ws import moe_ffn_mesh_ws
+
+        return moe_ffn_mesh_ws(x, p, cfg, group_size)
     return moe_ffn(x, p, cfg, group_size)

@@ -235,18 +235,25 @@ def ws_account(
     r, p, fq, fs, tid, cost,
     taken_ref, remaining_ref, clock_ref, work_ref, steals_ref, mult_ref,
     pool_off_ref=None,
-    *, n_queues: int, pool: bool = False,
+    *, n_queues: int, pool: bool = False, advisory: bool = True,
 ):
     """Post-execution bookkeeping shared by every task family: announcement
     row, multiplicity counter, work/steal telemetry, lockstep clock bump,
     and the best-effort advisory decrement (plain read + plain write — a
-    lost or stale update mis-ranks future victims, nothing more)."""
+    lost or stale update mis-ranks future victims, nothing more).
+
+    ``advisory=False`` suppresses the per-extraction advisory write so a
+    caller that drains a whole run inside one grid cell (round compression)
+    can coalesce the updates into one plain write for the run — the clamp
+    commutes (``max(max(r-c1,0)-c2,0) == max(r-c1-c2,0)`` for nonnegative
+    costs), so the coalesced value is bit-identical."""
     mult_ref[tid] = mult_ref[tid] + 1
     if pool:
         taken_ref[pool_off_ref[fq] + fs] = p
     else:
         taken_ref[fq, fs] = p
-    remaining_ref[fq] = jnp.maximum(remaining_ref[fq] - cost, 0)
+    if advisory:
+        remaining_ref[fq] = jnp.maximum(remaining_ref[fq] - cost, 0)
     work_ref[p] = work_ref[p] + cost
     own = jax.lax.rem(p, n_queues)
     steals_ref[p] = steals_ref[p] + jnp.where(fq != own, 1, 0)
@@ -283,7 +290,7 @@ def _generic_ws_kernel(
     r = pl.program_id(0)
     p = pl.program_id(1)
 
-    def account(fq, fs):
+    def account(fq, fs, advisory=True):
         rec = functools.partial(
             _slot_field, tasks_ref, pool_off_ref, fq, fs, pool=pool
         )
@@ -292,7 +299,9 @@ def _generic_ws_kernel(
             r, p, fq, fs, rec(F_TID), rec(F_COST),
             taken_ref, remaining_ref, clock_ref, work_ref, steals_ref,
             mult_ref, pool_off_ref, n_queues=n_queues, pool=pool,
+            advisory=advisory,
         )
+        return rec(F_COST)
 
     if compress:
         # Round compression (DESIGN.md §3.6): with no thieves there is no
@@ -319,13 +328,25 @@ def _generic_ws_kernel(
                 return carry[0]
 
             def body(carry):
-                _, h = carry
+                _, h, acc = carry
                 head_ref[own] = h + 1
                 local_head_ref[p, own] = h + 1
-                account(own, h)
-                return probe_own()
+                cost = account(own, h, advisory=False)
+                live, nh = probe_own()
+                return live, nh, acc + cost
 
-            jax.lax.while_loop(cond, body, probe_own())
+            live0, h0 = probe_own()
+            _, _, total = jax.lax.while_loop(
+                cond, body, (live0, h0, jnp.int32(0))
+            )
+            # amortized synchronization (ROADMAP): ONE plain advisory write
+            # for the whole drained run instead of one per extraction —
+            # bit-identical to the sequential clamps since the run's costs
+            # are nonnegative, and guarded so an empty run writes nothing
+            # (exactly like zero per-extraction writes).
+            @pl.when(total > 0)
+            def _advise():
+                remaining_ref[own] = jnp.maximum(remaining_ref[own] - total, 0)
 
         return
 

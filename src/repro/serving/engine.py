@@ -9,9 +9,12 @@ Two layers:
   `decode_step_ws`, which schedules the slots' ragged attention (and, with
   `cfg.moe_dispatch == "ws"`, the expert FFN) as tile tasks on the
   fence-free work-stealing megakernel; `use_ws=False` falls back to the
-  jitted dense decode_step.  Finished slots free immediately and are
-  refilled the same step (the vLLM-style iteration-level scheduling, in
-  JAX).
+  jitted dense decode_step.  On a multi-device host, `cfg.moe_dispatch ==
+  "mesh-ws"` shards the expert FFN's queues over the mesh "model" axis
+  instead (repro.mesh_ws, DESIGN.md §7) — serving is the mesh dispatch's
+  primary consumer, since it is forward-only.  Finished slots free
+  immediately and are refilled the same step (the vLLM-style
+  iteration-level scheduling, in JAX).
 
 * WorkStealingFrontend — the host side: per-engine-replica request queues
   implemented with the *literal* WS-WMULT algorithm (paper Fig. 7).  Each
