@@ -47,13 +47,17 @@ import time
 import numpy as np
 
 
-def run_one(T, d, f, E, D, k, P, bt, skew, seed=0):
+def run_one(T, d, f, E, D, k, P, bt, skew, seed=0, trace_sink=None):
     import jax
     import jax.numpy as jnp
 
     from repro.launch.hlo_analysis import analyze
     from repro.launch.mesh import make_expert_mesh
-    from repro.mesh_ws import exchange_payload_bytes, expert_ffn_mesh_ws
+    from repro.mesh_ws import (
+        exchange_payload_bytes,
+        expert_ffn_mesh_ws,
+        mesh_wstrace,
+    )
     from repro.moe_ws.layer import expert_ffn_nodrop_ref
 
     from benchmarks.moe_dispatch import make_skewed_routing
@@ -88,6 +92,7 @@ def run_one(T, d, f, E, D, k, P, bt, skew, seed=0):
         dt = time.perf_counter() - t0
         if steal:
             per_dev = tele[:, 0] + np.maximum(tele[:, 1], tele[:, 2])
+            tele_ws = tele
         else:
             per_dev = tele[:, 0]
         hlo = jax.jit(fn).lower(*args).compile().as_text()
@@ -114,6 +119,19 @@ def run_one(T, d, f, E, D, k, P, bt, skew, seed=0):
     row["speedup_vs_static"] = row["static"]["makespan"] / max(
         1, row["mesh_ws"]["makespan"]
     )
+    # per-phase trace columns + the Perfetto-exportable phase timeline
+    tr = mesh_wstrace(
+        tele_ws,
+        collective_bytes=row["collective_bytes"]["analytic_mesh_ws"],
+    )
+    row["mesh_ws"]["trace"] = dict(
+        phase2_own_max=int(tele_ws[:, 1].max()),
+        phase2_steal_max=int(tele_ws[:, 2].max()),
+        advisory_total=int(tele_ws[:, 3].sum()),
+        collective_bytes=row["collective_bytes"]["analytic_mesh_ws"],
+    )
+    if trace_sink is not None:
+        trace_sink["mesh_ws"] = tr
     return row
 
 
@@ -123,6 +141,9 @@ def main(argv=None):
     ap.add_argument("--skews", default="1,4,16")
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--trace", default=None, metavar="TRACE_JSON",
+                    help="write a Perfetto phase timeline of the "
+                         "highest-skew mesh-ws run")
     args = ap.parse_args(argv)
     if args.out is None:
         name = "BENCH_mesh.dryrun.json" if args.dry_run else "BENCH_mesh.json"
@@ -141,6 +162,8 @@ def main(argv=None):
         cmd = [sys.executable, str(pathlib.Path(__file__).resolve()),
                "--skews", args.skews, "--devices", str(args.devices),
                "--out", args.out]
+        if args.trace:
+            cmd += ["--trace", args.trace]
         if args.dry_run:
             cmd.append("--dry-run")
         return subprocess.run(cmd, env=env).returncode
@@ -152,10 +175,14 @@ def main(argv=None):
 
     skews = [float(s) for s in args.skews.split(",")]
     rows = []
+    traces = {}
     print("skew,static_makespan,mesh_makespan,speedup,devices_stole,"
           "tiles_stolen,collective_bytes,bit_identical")
     for skew in skews:
-        row = run_one(T, d, f, E, D, k, P, bt, skew)
+        sink = {}
+        row = run_one(T, d, f, E, D, k, P, bt, skew, trace_sink=sink)
+        if "mesh_ws" in sink:
+            traces[skew] = sink["mesh_ws"]
         rows.append(row)
         print(
             f"{skew},{row['static']['makespan']},{row['mesh_ws']['makespan']},"
@@ -173,6 +200,13 @@ def main(argv=None):
     )
     pathlib.Path(args.out).write_text(json.dumps(payload, indent=2))
     print(f"[mesh_dispatch] wrote {args.out}")
+
+    if args.trace and traces:
+        from repro.wstrace import write_perfetto
+
+        write_perfetto(traces[max(traces)], args.trace)
+        print(f"[mesh_dispatch] wrote Perfetto trace (skew={max(traces)}) to "
+              f"{args.trace} — open at https://ui.perfetto.dev")
 
     # headline claims: cross-device stealing wins under skew, and the
     # dispatch is exact — not approximately, bitwise

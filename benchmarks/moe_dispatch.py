@@ -81,7 +81,7 @@ def dense_drop_stats(idx, E: int, C: int):
     return dropped, dropped / float(T * k)
 
 
-def run_one(T, d, f, E, k, P, bt, cf, skew, seed=0):
+def run_one(T, d, f, E, k, P, bt, cf, skew, seed=0, trace=False, trace_sink=None):
     import jax
     import jax.numpy as jnp
 
@@ -130,6 +130,7 @@ def run_one(T, d, f, E, k, P, bt, cf, skew, seed=0):
         res = run_moe_schedule(
             state, x, routed.tok_idx, wg, wu, wd,
             bt=bt, steal=(sched == "ws"), steal_policy=policy,
+            trace=(trace and name == "ws"),
         )
         dt = time.perf_counter() - t0
         y = combine_routed(routed, tasks, res)
@@ -140,6 +141,7 @@ def run_one(T, d, f, E, k, P, bt, cf, skew, seed=0):
             total_work=res.total_work,
             wasted_slots=res.wasted_slots,
             steals=int(res.steals.sum()),
+            steal_ratio=round(res.steal_ratio, 3),
             mult_max=int(res.mult[: state.n_tasks].max()),
             slots_scanned=res.slots_scanned,
             extractions=res.extractions,
@@ -147,6 +149,13 @@ def run_one(T, d, f, E, k, P, bt, cf, skew, seed=0):
             max_abs_err=err,
             wall_s=round(dt, 3),
         )
+        if res.events is not None:
+            from repro.wstrace import WSTrace
+
+            tr = WSTrace.from_run(state, res)
+            row[name]["trace"] = tr.summary()
+            if trace_sink is not None:
+                trace_sink[name] = tr
     # the dense einsums process E*C rows no matter what the router did;
     # capacity is uniform per expert, so the grid splits evenly over P
     row["dense_makespan"] = -(-E * C // P)
@@ -209,11 +218,19 @@ def run_grad(T, d, f, E, k, P, bt, skew, seed=0):
     return rows
 
 
+# the CI smoke cell (T, d, f, E, k, P, bt, cf) — perf_smoke.py replays it
+# with tracing off and holds the makespans to exact equality with BENCH.json
+DRY_SHAPES = (48, 16, 32, 32, 2, 2, 4, 1.25)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--dry-run", action="store_true", help="tiny shapes for CI smoke")
     ap.add_argument("--skews", default="1,2,4,8")
     ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--trace", default=None, metavar="TRACE_JSON",
+                    help="write a Perfetto timeline of the highest-skew ws "
+                         "run (load it at https://ui.perfetto.dev)")
     args = ap.parse_args(argv)
     if args.out is None:
         # dry-run results go to a sibling file so CI smokes never clobber
@@ -222,17 +239,22 @@ def main(argv=None):
         args.out = str(pathlib.Path(__file__).parent / name)
 
     if args.dry_run:
-        T, d, f, E, k, P, bt, cf = 48, 16, 32, 32, 2, 2, 4, 1.25
+        T, d, f, E, k, P, bt, cf = DRY_SHAPES
     else:
         T, d, f, E, k, P, bt, cf = 96, 32, 64, 64, 2, 4, 4, 1.25
 
     skews = [float(s) for s in args.skews.split(",")]
     rows = []
+    traces = {}
     hdr = ("skew,dense_makespan,ws_makespan,speedup_dense,static_makespan,"
            "drop_rate,steals,mult_max,max_err")
     print(hdr)
     for skew in skews:
-        row = run_one(T, d, f, E, k, P, bt, cf, skew)
+        sink = {}
+        row = run_one(T, d, f, E, k, P, bt, cf, skew, trace=True,
+                      trace_sink=sink)
+        if "ws" in sink:
+            traces[skew] = sink["ws"]
         rows.append(row)
         print(
             f"{skew},{row['dense_makespan']},{row['ws']['makespan']},"
@@ -268,6 +290,13 @@ def main(argv=None):
     )
     pathlib.Path(args.out).write_text(json.dumps(payload, indent=2))
     print(f"[moe_dispatch] wrote {args.out}")
+
+    if args.trace and traces:
+        from repro.wstrace import write_perfetto
+
+        write_perfetto(traces[max(traces)], args.trace)
+        print(f"[moe_dispatch] wrote Perfetto trace (skew={max(traces)}) to "
+              f"{args.trace} — open at https://ui.perfetto.dev")
 
     # the headline claim this bench exists to witness: under real router
     # skew the dense path is lossy AND slower than dropless ws dispatch

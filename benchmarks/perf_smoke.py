@@ -20,7 +20,10 @@ that builds BENCH.json, and compares against the committed BENCH.json
   oracle — an absolute gate, like the grad rows;
 * the custom-VJP grad rows must be present (once committed) and match the
   no-drop oracle's gradients to fp32 tolerance — an absolute gate, since a
-  wrong backward is a correctness bug, not noise.
+  wrong backward is a correctness bug, not noise;
+* a ``trace=False`` replay of the headline ragged/moe cells must reproduce
+  the committed (traced) makespans **exactly** — event tracing must be free
+  when off (ISSUE 7; the trace=False lowering is the pre-trace kernel).
 
 Exit 1 on any violation (or if a bench's own headline claim already
 failed).  Tolerance defaults to 10% — tight enough to catch a real
@@ -132,6 +135,39 @@ def compare(fresh: dict, committed: dict, tol: float) -> list:
     return errs
 
 
+def trace_off_gate(committed: dict) -> list:
+    """ISSUE-7 'tracing must be free when off': replay the headline dry-run
+    cell of the ragged and moe benches with ``trace=False`` and hold the
+    makespans to EXACT equality with the committed BENCH.json smoke values
+    (which the bench mains produce with event tracing on).  Any drift means
+    the trace=False lowering is no longer the pre-trace kernel."""
+    errs = []
+    r_old = (committed or {}).get("ragged_attention")
+    if r_old:
+        from benchmarks.ragged_attention import DRY_SHAPES, run_one
+
+        row = run_one(*DRY_SHAPES, r_old["skew"], trace=False)
+        assert "trace" not in row["ws"], "trace=False run must carry no rings"
+        for name, key in (("ws", "ws_makespan"), ("static", "static_makespan")):
+            _check(errs, f"trace-off ragged {name} makespan",
+                   row[name]["makespan"] == r_old[key],
+                   f"trace=False replay gives {row[name]['makespan']}, "
+                   f"committed (traced) smoke says {r_old[key]} — "
+                   "tracing is no longer free when off")
+    m_old = (committed or {}).get("moe_dispatch")
+    if m_old:
+        from benchmarks.moe_dispatch import DRY_SHAPES, run_one
+
+        row = run_one(*DRY_SHAPES, m_old["skew"], trace=False)
+        assert "trace" not in row["ws"], "trace=False run must carry no rings"
+        _check(errs, "trace-off moe ws makespan",
+               row["ws"]["makespan"] == m_old["ws_makespan"],
+               f"trace=False replay gives {row['ws']['makespan']}, "
+               f"committed (traced) smoke says {m_old['ws_makespan']} — "
+               "tracing is no longer free when off")
+    return errs
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tolerance", type=float, default=0.10)
@@ -160,6 +196,7 @@ def main(argv=None):
     committed = json.loads(BENCH_JSON.read_text()).get("smoke", {})
     fresh = summarize(quick=True)
     errs = compare(fresh, committed, args.tolerance)
+    errs += trace_off_gate(committed)
     for e in errs:
         print(f"[perf-smoke] REGRESSION {e}")
     if status:

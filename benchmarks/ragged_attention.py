@@ -55,7 +55,7 @@ def dense_grid_makespan(lengths, S: int, H: int, bq: int, bk: int, P: int) -> in
     return int(loads.max())
 
 
-def run_one(B, H, S, hd, bq, bk, P, skew, seed=0):
+def run_one(B, H, S, hd, bq, bk, P, skew, seed=0, trace=False, trace_sink=None):
     import jax
     import jax.numpy as jnp
 
@@ -82,6 +82,7 @@ def run_one(B, H, S, hd, bq, bk, P, skew, seed=0):
         out, st = ragged_flash_attention(
             q, k, v, lengths, schedule=sched, steal_policy=policy,
             n_programs=P, bq=bq, bk=bk, return_stats=True,
+            trace=(trace and name == "ws"),
         )
         dt = time.perf_counter() - t0
         err = float(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)).max())
@@ -98,6 +99,10 @@ def run_one(B, H, S, hd, bq, bk, P, skew, seed=0):
             max_abs_err=err,
             wall_s=round(dt, 3),
         )
+        if getattr(st, "trace", None) is not None:
+            row[name]["trace"] = st.trace.summary()
+            if trace_sink is not None:
+                trace_sink[name] = st.trace
     row["dense_grid_makespan"] = dense_grid_makespan(lengths, S, H, bq, bk, P)
     row["speedup_vs_static"] = row["static"]["makespan"] / max(1, row["ws"]["makespan"])
     row["speedup_vs_dense"] = row["dense_grid_makespan"] / max(1, row["ws"]["makespan"])
@@ -108,11 +113,19 @@ def run_one(B, H, S, hd, bq, bk, P, skew, seed=0):
     return row
 
 
+# the CI smoke cell (B, H, S, hd, bq, bk, P) — perf_smoke.py replays it with
+# tracing off and holds the makespans to exact equality with BENCH.json
+DRY_SHAPES = (4, 2, 64, 8, 8, 8, 4)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--dry-run", action="store_true", help="tiny shapes for CI smoke")
     ap.add_argument("--skews", default="1,2,4,8")
     ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--trace", default=None, metavar="TRACE_JSON",
+                    help="write a Perfetto timeline of the highest-skew ws "
+                         "run (load it at https://ui.perfetto.dev)")
     args = ap.parse_args(argv)
     if args.out is None:
         # dry-run results go to a sibling file so CI smokes never clobber
@@ -121,17 +134,22 @@ def main(argv=None):
         args.out = str(pathlib.Path(__file__).parent / name)
 
     if args.dry_run:
-        B, H, S, hd, bq, bk, P = 4, 2, 64, 8, 8, 8, 4
+        B, H, S, hd, bq, bk, P = DRY_SHAPES
     else:
         B, H, S, hd, bq, bk, P = 8, 2, 256, 16, 16, 16, 4
 
     skews = [float(s) for s in args.skews.split(",")]
     rows = []
+    traces = {}
     hdr = ("skew,static_makespan,ws_makespan,speedup,dense_makespan,steals,"
            "wasted_static,wasted_ws,scan/extr_cost,scan/extr_scan,max_err")
     print(hdr)
     for skew in skews:
-        row = run_one(B, H, S, hd, bq, bk, P, skew)
+        sink = {}
+        row = run_one(B, H, S, hd, bq, bk, P, skew, trace=True,
+                      trace_sink=sink)
+        if "ws" in sink:
+            traces[skew] = sink["ws"]
         rows.append(row)
         print(
             f"{skew},{row['static']['makespan']},{row['ws']['makespan']},"
@@ -149,6 +167,13 @@ def main(argv=None):
     )
     pathlib.Path(args.out).write_text(json.dumps(payload, indent=2))
     print(f"[ragged_attention] wrote {args.out}")
+
+    if args.trace and traces:
+        from repro.wstrace import write_perfetto
+
+        write_perfetto(traces[max(traces)], args.trace)
+        print(f"[ragged_attention] wrote Perfetto trace (skew={max(traces)}) "
+              f"to {args.trace} — open at https://ui.perfetto.dev")
 
     # the paper-level claim this bench exists to witness, plus the §3.6
     # policy claim: cost-aware victim selection must not cost makespan

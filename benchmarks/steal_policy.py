@@ -80,6 +80,7 @@ def run_cell(E, T, k, P, bt, d, f, skew, seed=0, dryrun_analysis=True):
             total_work=res.total_work,
             wasted_slots=res.wasted_slots,
             steals=int(res.steals.sum()),
+            steal_ratio=round(res.steal_ratio, 3),
             slots_scanned=res.slots_scanned,
             extractions=res.extractions,
             scan_per_extraction=round(res.scan_per_extraction, 3),

@@ -260,19 +260,24 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
     wu = rng.randn(n_experts, d, f).astype(np.float32)
     wd = rng.randn(n_experts, f, d).astype(np.float32)
 
-    # (experiment label, steal, steal_policy, layout)
+    # (experiment label, steal, steal_policy, layout, trace) — the traced-on
+    # cases audit the ISSUE-7 event rings: the per-extraction record stores
+    # and the plain-write cursor bump must lower to the same plain tensor
+    # ops as the queue protocol they instrument
     cases = (
-        ("put-take", False, "cost", "padded"),
-        ("put-steal", True, "scan", "padded"),
-        ("put-steal", True, "cost", "padded"),
-        ("put-steal", True, "cost", "pool"),
+        ("put-take", False, "cost", "padded", False),
+        ("put-steal", True, "scan", "padded", False),
+        ("put-steal", True, "cost", "padded", False),
+        ("put-steal", True, "cost", "pool", False),
+        ("put-take-traced", False, "cost", "padded", True),
+        ("put-steal-traced", True, "cost", "padded", True),
     )
     rows = []
-    for exp, steal, policy, layout in cases:
+    for exp, steal, policy, layout, trace in cases:
         n_queues = n_experts if steal else n_programs
 
         def pipeline(idx, gates, x, wg, wu, wd, steal=steal, policy=policy,
-                     layout=layout, n_queues=n_queues):
+                     layout=layout, n_queues=n_queues, trace=trace):
             rounds = expert_rounds_bound(
                 n_tokens * top_k, bt, n_queues, n_programs, steal
             )
@@ -295,17 +300,21 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
                 )
             res = run_moe_schedule(
                 state, x, routed.tok_idx, wg, wu, wd, bt=bt, steal=steal,
-                steal_policy=policy, rounds=rounds,
+                steal_policy=policy, rounds=rounds, trace=trace,
             )
-            return res.out, res.mult, res.head, res.taken, res.remaining
+            outs = (res.out, res.mult, res.head, res.taken, res.remaining)
+            if trace:  # keep the rings live so their stores aren't DCE'd
+                outs += (res.events, res.ev_cursor)
+            return outs
 
         text = jax.jit(pipeline).lower(
             jnp.asarray(idx), jnp.asarray(gates), jnp.asarray(x),
             jnp.asarray(wg), jnp.asarray(wu), jnp.asarray(wd),
         ).as_text()
+        tag = f"{policy},{layout}" + (",trace" if trace else "")
         rows.append(_fence_free_lowering_row(
-            text, f"traced Put lowering [{policy}/{layout}]", exp,
-            f"moe-ws-traced[{policy},{layout}]", n_tokens * top_k,
+            text, f"traced Put lowering [{tag}]", exp,
+            f"moe-ws-traced[{tag}]", n_tokens * top_k,
         ))
     # backward lowering: jit(grad) through the custom VJP — forward
     # megakernel + no-drop-reference transpose, both backward evaluations
@@ -357,7 +366,8 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
     print(
         "[zero-cost] traced-put audit OK: moe-ws-traced jit lowering has "
         "0 RMW / 0 locks / 0 fences on put-take and put-steal "
-        "(scan + cost policies, padded + pool layouts), on the "
+        "(scan + cost policies, padded + pool layouts, event tracing "
+        "off AND on), on the "
         "custom-VJP backward (grad-dense + grad-ws) and on the "
         f"shard_map mesh dispatch (D={n_dev})"
     )

@@ -21,6 +21,7 @@ from .layer import (
     emulate_mesh_dispatch,
     expert_ffn_mesh_ws,
     mesh_dispatch_body,
+    mesh_wstrace,
     moe_ffn_mesh_ws,
     phase_rounds,
 )
@@ -54,6 +55,7 @@ __all__ = [
     "hops_matrix",
     "local_pool_state",
     "mesh_dispatch_body",
+    "mesh_wstrace",
     "moe_ffn_mesh_ws",
     "phase_rounds",
     "plan_steals",

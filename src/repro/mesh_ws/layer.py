@@ -223,6 +223,42 @@ def mesh_dispatch_body(
     return y, tele[None]
 
 
+def mesh_wstrace(tele, *, collective_bytes=None):
+    """Lift a ``[D, len(TELE_FIELDS)]`` telemetry block into a
+    :class:`~repro.wstrace.trace.WSTrace` carrying per-device *phase*
+    counters (``mesh_phases``) instead of per-extraction events — the
+    cross-device granularity the two-phase protocol exposes.  The Perfetto
+    exporter renders one track per device with phase slices, remote-steal
+    flow arrows (victim → thief), and advisory / collective-bytes counter
+    tracks.  ``collective_bytes`` (per-device, e.g.
+    :func:`~repro.mesh_ws.advisory.exchange_payload_bytes`) is attached to
+    every device's counters when given."""
+    import numpy as np
+
+    from repro.wstrace.ring import EVENT_WIDTH
+    from repro.wstrace.trace import WSTrace
+
+    tele = np.asarray(tele)
+    D = tele.shape[0]
+    phases = []
+    for dev in range(D):
+        row = {name: int(tele[dev, i]) for i, name in enumerate(TELE_FIELDS)}
+        if collective_bytes is not None:
+            row["collective_bytes"] = int(collective_bytes)
+        phases.append(row)
+    # per-device wall: phase 1 then the longer of own-continue / steal
+    span = tele[:, 0] + np.maximum(tele[:, 1], tele[:, 2])
+    return WSTrace(
+        events=np.zeros((0, EVENT_WIDTH), np.int32),
+        n_programs=D,
+        n_queues=D,
+        makespan=int(span.max(initial=0)),
+        dropped=np.zeros(D, np.int64),
+        queue_loads=None,
+        mesh_phases=phases,
+    )
+
+
 def expert_ffn_mesh_ws(
     idx, gates, x, wg, wu, wd, *,
     mesh, bt: int = 8, n_programs: int = 2, alpha: int = 1,

@@ -161,6 +161,8 @@ def run_moe_grad_schedule(
     mult: Optional[jax.Array] = None,
     compress_runs: Optional[bool] = None,
     interpret: bool = True,
+    trace: bool = False,
+    trace_capacity: Optional[int] = None,
 ) -> WSRunResult:
     """Launch the transpose (backward) megakernel over a prepared
     :class:`QueueState` — the second ``launch_ws_grid`` of the custom VJP's
@@ -184,7 +186,8 @@ def run_moe_grad_schedule(
     return launch_ws_grid(
         state, execute, (tok_idx, x, gy, gate_rows, wg, wu, wd), out,
         steal=steal, steal_policy=steal_policy, rounds=rounds, mult=mult,
-        compress_runs=compress_runs, interpret=interpret,
+        compress_runs=compress_runs, interpret=interpret, trace=trace,
+        trace_capacity=trace_capacity,
     )
 
 
@@ -204,6 +207,8 @@ def run_moe_schedule(
     mult: Optional[jax.Array] = None,
     compress_runs: Optional[bool] = None,
     interpret: bool = True,
+    trace: bool = False,
+    trace_capacity: Optional[int] = None,
 ) -> WSRunResult:
     """Launch the expert megakernel over a prepared :class:`QueueState`.
 
@@ -220,5 +225,6 @@ def run_moe_schedule(
     return launch_ws_grid(
         state, execute, (tok_idx, x, wg, wu, wd), out,
         steal=steal, steal_policy=steal_policy, rounds=rounds, mult=mult,
-        compress_runs=compress_runs, interpret=interpret,
+        compress_runs=compress_runs, interpret=interpret, trace=trace,
+        trace_capacity=trace_capacity,
     )

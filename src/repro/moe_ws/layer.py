@@ -170,11 +170,12 @@ def expert_ffn_nodrop_ref(idx, gates, x, wg, wu, wd):
     return (jnp.asarray(gates)[:, :, None] * y_sel).sum(axis=1)
 
 
-def _dispatch_and_run(static: _CoreStatic, x_flat, idx, gate_vals, wg, wu, wd):
+def _dispatch_and_run(static: _CoreStatic, x_flat, idx, gate_vals, wg, wu, wd,
+                      trace: bool = False):
     """Put + megakernel launch + multiplicity-normalized combine — the
     routed-expert core shared by the custom VJP's primal/forward and the
     telemetry path.  Returns ``(y_routed [T, d] f32, state, res, routed,
-    tasks)``."""
+    tasks)``; ``trace=True`` records event rings on the launch."""
     E, schedule = static.n_experts, static.schedule
     n_programs, bt = static.n_programs, static.bt
     T, k = idx.shape
@@ -236,6 +237,7 @@ def _dispatch_and_run(static: _CoreStatic, x_flat, idx, gate_vals, wg, wu, wd):
         steal_policy=static.steal_policy,
         rounds=rounds,
         interpret=static.interpret,
+        trace=trace,
     )
 
     # multiplicity-divisor normalization, then the gate-weighted combine:
@@ -469,6 +471,7 @@ def moe_ffn_ws(
     bt: int = 8,
     interpret: bool = True,
     return_stats: bool = False,
+    trace: bool = False,
 ):
     """x: [B, S, d] -> (y: [B, S, d], aux_loss scalar) — dropless WS dispatch.
 
@@ -487,7 +490,9 @@ def moe_ffn_ws(
     ``route_to_tasks_pool_jax``), ``"padded"`` the PR-3 per-expert
     worst-case layout; the static schedule regroups experts onto program
     queues and always uses ``"padded"``.  ``return_stats`` needs concrete
-    telemetry and is eager-only.
+    telemetry and is eager-only; ``trace=True`` (with ``return_stats``)
+    additionally records per-extraction event rings and attaches the
+    decoded :class:`~repro.wstrace.trace.WSTrace` to the stats.
 
     **Differentiable** (DESIGN.md §4.5): the routed-expert core carries a
     ``jax.custom_vjp`` whose backward is the closed-form transpose of the
@@ -504,6 +509,9 @@ def moe_ffn_ws(
     traced = isinstance(x, jax.core.Tracer)
     if traced and return_stats:
         raise ValueError("return_stats needs concrete telemetry; call eagerly")
+    if trace and not return_stats:
+        raise ValueError("trace=True attaches the WSTrace to the stats; "
+                         "pass return_stats=True as well")
     B, S, d = x.shape
     x_flat = x.reshape(B * S, d)
     probs, gate_vals, idx, aux = _router(x_flat, p, cfg, group_size)
@@ -516,7 +524,8 @@ def moe_ffn_ws(
     if return_stats:
         # eager telemetry path: same impl, no VJP wrapper in the way
         y, state, res, _, _ = _dispatch_and_run(
-            static, x_flat, idx, gate_vals, p["we_g"], p["we_u"], p["we_d"]
+            static, x_flat, idx, gate_vals, p["we_g"], p["we_u"], p["we_d"],
+            trace=trace,
         )
         _check_drained(state, res)
     else:

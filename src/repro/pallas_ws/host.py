@@ -52,7 +52,8 @@ class PallasWSHost:
 
     OWNER = 0
 
-    def __init__(self, backend=None, capacity: int = 4096, **_ignored: Any):
+    def __init__(self, backend=None, capacity: int = 4096,
+                 trace: bool = False, **_ignored: Any):
         backend = backend if backend is not None else ThreadBackend()
         self.backend = backend
         self.capacity = capacity
@@ -64,6 +65,23 @@ class PallasWSHost:
         self.remaining = backend.cell(0)  # advisory, plain R/W, stale-tolerant
         self.tail = 0  # owner-local, exactly as in Fig. 7
         self._local: Dict[int, int] = {}  # per-process persistent head bound
+        # Host mirror of the device event rings (repro.wstrace.ring): one
+        # record per successful claim, appended *outside* the protocol's
+        # shared-memory accesses — the instruction-mix audit is unchanged.
+        self.trace = trace
+        self._events: list = []
+
+    def _record(self, pid: int, slot: int, x: Any, kind: str) -> None:
+        if not self.trace:
+            return
+        self._events.append({
+            "pid": pid, "slot": slot, "kind": kind, "cost": _cost_of(x),
+            "victim": self.OWNER if kind != "take" else -1,
+        })
+
+    def trace_events(self) -> list:
+        """Claim-ordered host event log (``trace=True`` instances only)."""
+        return list(self._events)
 
     def _local_head(self, pid: int) -> int:
         return self._local.get(pid, 0)
@@ -97,6 +115,7 @@ class PallasWSHost:
             self._local[pid] = head + 1
             self.taken.write((pid, head), pid, pid)
             self._advise(-_cost_of(x), pid)
+            self._record(pid, head, x, "take")
             return x
         self._local[pid] = head
         return EMPTY
@@ -112,6 +131,7 @@ class PallasWSHost:
             self._local[pid] = head + 1  # line 15
             self.taken.write((pid, head), pid, pid)
             self._advise(-_cost_of(x), pid)
+            self._record(pid, head, x, "steal")
             return x
         self._local[pid] = head
         return EMPTY

@@ -79,6 +79,22 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from ..wstrace.ring import (
+    EV_COST,
+    EV_KIND,
+    EV_MULT,
+    EV_PROG,
+    EV_QUEUE,
+    EV_ROUND,
+    EV_SLOT,
+    EV_TID,
+    EV_VICTIM,
+    EVENT_WIDTH,
+    KIND_STEAL_COST,
+    KIND_STEAL_REMOTE,
+    KIND_STEAL_SCAN,
+    KIND_TAKE,
+)
 from .queues import QueueState, queue_costs
 from .tasks import (
     BOTTOM,
@@ -98,7 +114,9 @@ STEAL_POLICIES = ("cost", "scan")
 
 # Order of the mutable (input-output aliased) queue/telemetry arrays every
 # family launch carries: head, local_head, taken, remaining, clock, work,
-# steals, scanned, mult, out.  ``launch_ws_grid`` owns this layout.
+# steals, scanned, mult, out.  ``launch_ws_grid`` owns this layout.  A
+# traced launch (``trace=True``) appends two more — the event rings and
+# their per-program cursors (``repro.wstrace.ring``) — after ``out``.
 N_MUTABLE = 10
 
 
@@ -270,30 +288,75 @@ def _generic_ws_kernel(
     steal_policy: str,
     pool: bool,
     compress: bool,
+    trace: bool = False,
+    trace_capacity: int = 0,
+    steal_kind: int = KIND_STEAL_COST,
 ):
     """Scheduler shell around a family ``execute`` body.
 
-    Ref layout (positional, fixed by :func:`launch_ws_grid`): N_MUTABLE stale
-    input snapshots, the tasks array, the (static) tails, the pool segment
-    offsets when ``pool``, ``n_pure`` family inputs, then the N_MUTABLE live
-    (aliased) output refs.
+    Ref layout (positional, fixed by :func:`launch_ws_grid`): the mutable
+    stale input snapshots (N_MUTABLE, +2 when ``trace``), the tasks array,
+    the (static) tails, the pool segment offsets when ``pool``, ``n_pure``
+    family inputs, then the live (aliased) output refs in the same order as
+    the snapshots.
     """
-    tasks_ref = refs[N_MUTABLE]
-    tail_ref = refs[N_MUTABLE + 1]
-    off = N_MUTABLE + 2
+    n_mut = N_MUTABLE + (2 if trace else 0)
+    tasks_ref = refs[n_mut]
+    tail_ref = refs[n_mut + 1]
+    off = n_mut + 2
     pool_off_ref = refs[off] if pool else None
     off += int(pool)
     pure = refs[off: off + n_pure]
+    live = refs[off + n_pure:]
     (head_ref, local_head_ref, taken_ref, remaining_ref, clock_ref, work_ref,
-     steals_ref, scanned_ref, mult_ref, out_ref) = refs[off + n_pure:]
+     steals_ref, scanned_ref, mult_ref, out_ref) = live[:N_MUTABLE]
+    ev_ref, ev_cursor_ref = live[N_MUTABLE:] if trace else (None, None)
 
     r = pl.program_id(0)
     p = pl.program_id(1)
+
+    def trace_append(fq, fs, tid, cost, t0):
+        """Append one extraction record to program ``p``'s event ring —
+        plain stores only (guarded slot writes + a plain cursor bump), so
+        the traced lowering stays inside the fence-free audit.  The ring
+        never wraps: on overflow the record is *dropped* but the cursor
+        keeps counting, so the host knows exactly how many were lost."""
+        own = jax.lax.rem(p, n_queues)
+        is_steal = fq != own
+        if steal_kind == KIND_STEAL_REMOTE:
+            # remote-segment launches (mesh_ws phase 2b): every claim works
+            # a stolen segment, own-queue probes included
+            kind = jnp.int32(KIND_STEAL_REMOTE)
+        else:
+            kind = jnp.where(is_steal, steal_kind, KIND_TAKE).astype(jnp.int32)
+        nprog = pl.num_programs(1)
+        victim = jnp.where(is_steal & (fq < nprog), fq, -1).astype(jnp.int32)
+        c = ev_cursor_ref[p]
+
+        @pl.when(c < trace_capacity)
+        def _append():
+            ev_ref[p, c, EV_ROUND] = t0
+            ev_ref[p, c, EV_PROG] = p
+            ev_ref[p, c, EV_QUEUE] = fq
+            ev_ref[p, c, EV_SLOT] = fs
+            ev_ref[p, c, EV_TID] = tid
+            ev_ref[p, c, EV_COST] = cost
+            ev_ref[p, c, EV_KIND] = kind
+            ev_ref[p, c, EV_VICTIM] = victim
+            ev_ref[p, c, EV_MULT] = mult_ref[tid]
+
+        ev_cursor_ref[p] = c + 1
 
     def account(fq, fs, advisory=True):
         rec = functools.partial(
             _slot_field, tasks_ref, pool_off_ref, fq, fs, pool=pool
         )
+        if trace:
+            # virtual start of this execution — read before ws_account bumps
+            # the lockstep clock, so the event's [t0, t0 + cost) interval is
+            # the tile-slots the program is busy (also correct inside a
+            # compressed drain run, where the clock advances per extraction)
+            t0 = jnp.maximum(clock_ref[p], r)
         execute(rec, pure, out_ref)
         ws_account(
             r, p, fq, fs, rec(F_TID), rec(F_COST),
@@ -301,6 +364,8 @@ def _generic_ws_kernel(
             mult_ref, pool_off_ref, n_queues=n_queues, pool=pool,
             advisory=advisory,
         )
+        if trace:
+            trace_append(fq, fs, rec(F_TID), rec(F_COST), t0)
         return rec(F_COST)
 
     if compress:
@@ -380,6 +445,10 @@ class WSRunResult:
     steals: np.ndarray      # successful cross-queue grabs  [n_programs]
     scanned: np.ndarray     # task-slot probes issued       [n_programs]
     mult: np.ndarray        # per-task execution counts     [n_tasks]
+    # event rings (trace=True launches only; None otherwise) — see
+    # repro.wstrace.ring for the record schema and decode
+    events: Optional[np.ndarray] = None     # [n_programs, cap, EVENT_WIDTH]
+    ev_cursor: Optional[np.ndarray] = None  # [n_programs] appends attempted
 
     @property
     def makespan(self) -> int:
@@ -410,6 +479,22 @@ class WSRunResult:
         """Slots read per successful extraction — the victim-scan overhead
         the cost policy exists to collapse."""
         return self.slots_scanned / max(1, self.extractions)
+
+    @property
+    def steal_ratio(self) -> float:
+        """Fraction of extractions that were cross-queue steals (exact for
+        launches that started with a fresh multiplicity buffer)."""
+        return int(self.steals.sum()) / max(1, self.extractions)
+
+    @property
+    def per_queue_drained(self) -> np.ndarray:
+        """Distinct slots claimed per queue.  Exact on the dense layout
+        (one announcement row per queue); on the flat pool layout the
+        announcement rows don't carry queue boundaries, so the final head
+        watermark stands in (identical for completed drains)."""
+        if self.taken.ndim == 2:
+            return (np.asarray(self.taken) >= 0).sum(axis=1)
+        return np.asarray(self.head).copy()
 
 
 # Rounds the compressed no-steal drain needs: every owner empties its queue
@@ -467,6 +552,9 @@ def launch_ws_grid(
     mult: Optional[jax.Array] = None,
     compress_runs: Optional[bool] = None,
     interpret: bool = True,
+    trace: bool = False,
+    trace_capacity: Optional[int] = None,
+    trace_remote: bool = False,
 ) -> WSRunResult:
     """Run the persistent WS grid with a family ``execute`` body.
 
@@ -478,6 +566,17 @@ def launch_ws_grid(
     no-steal launches drain whole owner runs per grid cell (§3.6), steal
     launches keep the one-extraction-per-round lockstep so thief
     concurrency stays faithfully modeled.
+
+    ``trace=True`` additionally records every extraction into per-program
+    event rings (``WSRunResult.events``/``ev_cursor``; schema in
+    :mod:`repro.wstrace.ring`) with plain stores only.  The default ring
+    capacity is the static per-program claim bound — ``rounds`` for
+    lockstep launches (one claim per round), the queue capacity for
+    compressed drains — so nothing drops unless ``trace_capacity``
+    deliberately shrinks the ring.  ``trace_remote`` tags every event
+    ``steal-remote`` (mesh_ws stolen-segment launches).  ``trace=False``
+    (the default) adds no refs and no kernel code: the lowering is
+    bit-identical to the untraced build.
     """
     assert steal_policy in STEAL_POLICIES, steal_policy
     P = state.n_programs
@@ -494,6 +593,12 @@ def launch_ws_grid(
     remaining = state.remaining
     if remaining is None:
         remaining = queue_costs(state)
+    if trace_capacity is None:
+        trace_capacity = state.capacity if compress else rounds
+    steal_kind = (
+        KIND_STEAL_REMOTE if trace_remote
+        else (KIND_STEAL_SCAN if steal_policy == "scan" else KIND_STEAL_COST)
+    )
 
     kernel = functools.partial(
         _generic_ws_kernel,
@@ -505,6 +610,9 @@ def launch_ws_grid(
         steal_policy=steal_policy,
         pool=pool,
         compress=compress,
+        trace=trace,
+        trace_capacity=trace_capacity,
+        steal_kind=steal_kind,
     )
 
     def full(a):
@@ -522,6 +630,11 @@ def launch_ws_grid(
         jnp.asarray(mult),
         jnp.asarray(out),
     ]
+    if trace:
+        mutable += [
+            jnp.full((P, trace_capacity, EVENT_WIDTH), -1, jnp.int32),
+            jnp.zeros((P,), jnp.int32),  # event cursors
+        ]
     pure_arrays = [jnp.asarray(state.tasks), jnp.asarray(state.tail)]
     if pool:
         pure_arrays.append(jnp.asarray(state.pool_off))
@@ -536,12 +649,15 @@ def launch_ws_grid(
         interpret=interpret,
     )(*mutable, *pure_arrays)
     (head, local_head, taken, remaining, clock, work, steals, scanned, mult,
-     out) = outs
+     out) = outs[:N_MUTABLE]
+    events, ev_cursor = outs[N_MUTABLE:] if trace else (None, None)
 
     def host(a):
         # eager launches hand numpy views back to the drills/telemetry;
         # traced launches keep the jax values (np.asarray would throw)
-        return a if isinstance(a, jax.core.Tracer) else np.asarray(a)
+        if a is None or isinstance(a, jax.core.Tracer):
+            return a
+        return np.asarray(a)
 
     return WSRunResult(
         out=out,
@@ -554,6 +670,8 @@ def launch_ws_grid(
         steals=host(steals),
         scanned=host(scanned),
         mult=host(mult),
+        events=host(events),
+        ev_cursor=host(ev_cursor),
     )
 
 
@@ -639,13 +757,16 @@ def run_ws_schedule(
     mult: Optional[jax.Array] = None,
     compress_runs: Optional[bool] = None,
     interpret: bool = True,
+    trace: bool = False,
+    trace_capacity: Optional[int] = None,
 ) -> WSRunResult:
     """Launch the attention megakernel over a prepared :class:`QueueState`.
 
     ``q``: [B, H, Sq, hd] with Sq a multiple of ``bq``; ``k``/``v``:
     [B, Hkv, Sk, hd] with Sk a multiple of ``bk``.  ``out``/``mult`` may be
     carried over from a previous launch (resume / multiplicity drills);
-    fresh zeros otherwise.
+    fresh zeros otherwise.  ``trace=True`` records per-extraction event
+    rings (see :func:`launch_ws_grid`).
     """
     B, H, Sq, hd = q.shape
     Hkv, Sk = k.shape[1], k.shape[2]
@@ -660,4 +781,5 @@ def run_ws_schedule(
         state, execute, (q, k, v), out,
         steal=steal, steal_policy=steal_policy, rounds=rounds, mult=mult,
         compress_runs=compress_runs, interpret=interpret,
+        trace=trace, trace_capacity=trace_capacity,
     )

@@ -56,10 +56,16 @@ class RaggedStats:
     extractions: int
     scan_per_extraction: float
     queue_loads: list
+    trace: object = None  # WSTrace when the launch recorded event rings
 
     @classmethod
     def from_run(cls, schedule, state, res: WSRunResult,
                  steal_policy: str = "cost") -> "RaggedStats":
+        trace = None
+        if res.events is not None:
+            from repro.wstrace.trace import WSTrace
+
+            trace = WSTrace.from_run(state, res)
         return cls(
             schedule=schedule,
             steal_policy=steal_policy,
@@ -73,6 +79,7 @@ class RaggedStats:
             extractions=res.extractions,
             scan_per_extraction=round(res.scan_per_extraction, 3),
             queue_loads=[int(c) for c in queue_costs(state)],
+            trace=trace,
         )
 
 
@@ -110,12 +117,15 @@ def ragged_flash_attention(
     bk: int = 32,
     interpret: bool = True,
     return_stats: bool = False,
+    trace: bool = False,
 ):
     """Ragged flash attention via the persistent WS megakernel.
 
     q: [B, H, S, hd]; k, v: [B, Hkv, S, hd]; lengths: [B] host ints.
     Rows at or past ``lengths[b]`` return 0.  Output matches the dense
     length-masked reference exactly (up to fp32 accumulation order).
+    ``trace=True`` records event rings and attaches the decoded
+    :class:`~repro.wstrace.trace.WSTrace` to the returned stats.
     """
     assert schedule in SCHEDULES, schedule
     B, H, S, hd = q.shape
@@ -133,7 +143,7 @@ def ragged_flash_attention(
         state, qp, kp, vp,
         causal=causal, bq=bq, bk=bk,
         steal=(schedule == "ws"), steal_policy=steal_policy,
-        interpret=interpret,
+        interpret=interpret, trace=trace,
     )
     _check_drained(state, res)
     div = multiplicity_divisor(tasks, res.mult, (B, H, qp.shape[2]))
@@ -205,6 +215,7 @@ def ragged_decode_attention(
     bk: int = 64,
     interpret: bool = True,
     return_stats: bool = False,
+    trace: bool = False,
 ):
     """Single-token decode over ragged KV caches: q [B, H, hd] attends slots
     ``[0, lengths[b])`` of k, v [B, Hkv, S, hd].  Dead rows (length 0)
@@ -226,6 +237,8 @@ def ragged_decode_attention(
     if traced:
         if return_stats:
             raise ValueError("return_stats needs concrete telemetry; call eagerly")
+        if trace:
+            raise ValueError("trace needs concrete event rings; call eagerly")
         n_queues = n_programs  # partition="batch": queue = b % n_programs
         records, live = emit_decode_tasks_jax(lengths, H, bk)
         cand, cand_live = owner_queue_candidates(records, live, n_queues)
@@ -245,7 +258,7 @@ def ragged_decode_attention(
         state, q4, kp, vp,
         causal=False, bq=1, bk=bk,
         steal=steal, steal_policy=steal_policy, rounds=rounds,
-        interpret=interpret,
+        interpret=interpret, trace=trace,
     )
     if traced:
         # tid = b·H + h is static: the divisor is just the reshaped

@@ -29,6 +29,7 @@ Two layers:
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -45,6 +46,7 @@ from repro.models import (
     prefill,
     ws_decode_supported,
 )
+from repro.wstrace.metrics import SchedulerMetrics
 
 
 def jit_decode_step_ws(cfg, *, schedule: str = "ws", bk: int = 64,
@@ -123,6 +125,9 @@ class ContinuousBatcher:
         self._prefill = jax.jit(
             lambda p, b, cap=capacity: prefill(p, cfg, b, capacity=cap)
         )
+        # per-step serving telemetry (latency percentiles, slot utilization,
+        # admissions) — read it back via stats()
+        self.metrics = SchedulerMetrics(slots=slots)
 
     # -- admission ------------------------------------------------------------
     def admit(self, req: Request) -> bool:
@@ -144,12 +149,15 @@ class ContinuousBatcher:
         self.live[slot] = req
         self.pos[slot] = len(req.tokens)
         self.budget[slot] = req.max_new - 1
+        self.metrics.record_admission()
         return True
 
     # -- one engine iteration ---------------------------------------------------
     def step(self) -> List[Request]:
         if not any(r is not None for r in self.live):
             return []
+        n_live = self.n_live
+        t0 = time.perf_counter()
         tokens = np.zeros((self.B, 1), dtype=np.int32)
         for i, r in enumerate(self.live):
             if r is not None:
@@ -159,7 +167,8 @@ class ContinuousBatcher:
             self.params, self.caches, jnp.asarray(tokens), jnp.asarray(self.pos)
         )
         done = []
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))  # syncs the device step
+        self.metrics.record_step(time.perf_counter() - t0, n_live)
         for i, r in enumerate(self.live):
             if r is None:
                 continue
@@ -169,7 +178,14 @@ class ContinuousBatcher:
             if self.budget[i] <= 0 or self.pos[i] >= self.cap - 1:
                 done.append(r)
                 self.live[i] = None
+        if done:
+            self.metrics.record_completion(len(done))
         return done
+
+    def stats(self) -> dict:
+        """Serving metrics snapshot: per-step latency p50/p99 (ms), mean
+        slot utilization, admissions/completions (SchedulerMetrics)."""
+        return self.metrics.snapshot()
 
     @property
     def n_live(self) -> int:
@@ -218,7 +234,13 @@ class WorkStealingFrontend:
         self.batchers = [make_batcher() for _ in range(n_replicas)]
         self.steal = steal
         self.completed: Dict[int, Request] = {}
-        self.stats = {"admitted": 0, "stolen": 0, "dup_completed": 0}
+        # aggregate counters plus the per-replica scheduling history the
+        # run used to discard — read both back via stats()
+        self.counters = {"admitted": 0, "stolen": 0, "dup_completed": 0}
+        self.per_replica = [
+            {"submitted": 0, "admitted": 0, "stolen": 0, "completed": 0}
+            for _ in range(n_replicas)
+        ]
         # Per-replica rotating victim cursor: scanning victims from a fixed
         # origin (always replica 0 first) starves high-index replicas under
         # contention — every thief drains the low queues before ever looking
@@ -228,6 +250,7 @@ class WorkStealingFrontend:
         self._lock = threading.Lock()
 
     def submit(self, replica: int, req: Request):
+        self.per_replica[replica]["submitted"] += 1
         self.queues[replica].put(req)
 
     def _next_request(self, replica: int) -> Optional[Request]:
@@ -243,7 +266,8 @@ class WorkStealingFrontend:
                 if got is not EMPTY:
                     # resume past this victim next time
                     self._victim_rr[replica] = (start + j + 1) % len(victims)
-                    self.stats["stolen"] += 1
+                    self.counters["stolen"] += 1
+                    self.per_replica[replica]["stolen"] += 1
                     return got
             self._victim_rr[replica] = (start + 1) % len(victims)
         return None
@@ -259,13 +283,15 @@ class WorkStealingFrontend:
                         break
                     # idempotent admission: a stolen duplicate re-runs prefill
                     b.admit(Request(req.rid, req.tokens, req.max_new))
-                    self.stats["admitted"] += 1
+                    self.counters["admitted"] += 1
+                    self.per_replica[rep]["admitted"] += 1
                     worked = True
                 if b.n_live:
                     for r in b.step():
+                        self.per_replica[rep]["completed"] += 1
                         with self._lock:
                             if r.rid in self.completed:
-                                self.stats["dup_completed"] += 1  # weak mult.
+                                self.counters["dup_completed"] += 1  # weak mult.
                             else:
                                 self.completed[r.rid] = r
                     worked = True
@@ -274,3 +300,18 @@ class WorkStealingFrontend:
             if not worked:
                 break
         return self.completed
+
+    def stats(self) -> dict:
+        """Scheduling history of the run: aggregate counters, per-replica
+        submit/admit/steal/completion counts, and each batcher's
+        SchedulerMetrics snapshot (when the batcher exposes one)."""
+        out = {
+            "totals": dict(self.counters),
+            "per_replica": [dict(c) for c in self.per_replica],
+        }
+        snaps = []
+        for b in self.batchers:
+            snap = getattr(b, "stats", None)
+            snaps.append(snap() if callable(snap) else None)
+        out["batchers"] = snaps
+        return out

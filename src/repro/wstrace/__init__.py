@@ -1,0 +1,51 @@
+"""repro.wstrace — observability for the fence-free WS scheduler.
+
+Device half: a per-program event ring buffer the megakernel appends to with
+plain stores only (schema in :mod:`.ring`); host half: structured
+:class:`~repro.wstrace.trace.WSTrace` analyses, Chrome/Perfetto timeline
+export (:mod:`.perfetto`), and the serving-side
+:class:`~repro.wstrace.metrics.SchedulerMetrics` sink.
+
+Lazy exports (PEP 562) keep this importable from the kernel layer without
+dragging the analysis modules into every launch.
+"""
+
+_EXPORTS = {
+    "EVENT_WIDTH": ".ring",
+    "EV_ROUND": ".ring",
+    "EV_PROG": ".ring",
+    "EV_QUEUE": ".ring",
+    "EV_SLOT": ".ring",
+    "EV_TID": ".ring",
+    "EV_COST": ".ring",
+    "EV_KIND": ".ring",
+    "EV_VICTIM": ".ring",
+    "EV_MULT": ".ring",
+    "KIND_TAKE": ".ring",
+    "KIND_STEAL_SCAN": ".ring",
+    "KIND_STEAL_COST": ".ring",
+    "KIND_STEAL_REMOTE": ".ring",
+    "KIND_NAMES": ".ring",
+    "STEAL_KINDS": ".ring",
+    "decode_rings": ".ring",
+    "WSTrace": ".trace",
+    "to_perfetto": ".perfetto",
+    "write_perfetto": ".perfetto",
+    "SchedulerMetrics": ".metrics",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(module, __name__), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

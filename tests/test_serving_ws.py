@@ -80,13 +80,13 @@ def test_duplicate_admission_dedups_on_completion():
     # both replicas admit their copy — idempotent (same rid, same tokens)
     f.batchers[0].admit(Request(req.rid, req.tokens, req.max_new))
     f.batchers[1].admit(Request(req.rid, req.tokens, req.max_new))
-    f.stats["admitted"] += 2
-    f.stats["stolen"] += 1
+    f.counters["admitted"] += 2
+    f.counters["stolen"] += 1
 
     completed = f.run(max_iters=50)
     assert set(completed) == {42}, "exactly one result per rid"
-    assert f.stats["dup_completed"] == 1, "the duplicate was observed and dropped"
-    assert f.stats["stolen"] == 1
+    assert f.counters["dup_completed"] == 1, "the duplicate was observed and dropped"
+    assert f.counters["stolen"] == 1
     # queues fully drained
     assert q.take() is EMPTY and q.steal(5) is EMPTY
 
@@ -97,7 +97,7 @@ def test_no_duplicates_without_contention():
         f.submit(rid % 2, Request(rid=rid, tokens=np.array([rid], dtype=np.int32)))
     completed = f.run(max_iters=200)
     assert set(completed) == set(range(6))
-    assert f.stats["dup_completed"] == 0
+    assert f.stats()["totals"]["dup_completed"] == 0
 
 
 def test_idle_replica_steals_backlogged_queue():
@@ -106,7 +106,12 @@ def test_idle_replica_steals_backlogged_queue():
         f.submit(0, Request(rid=rid, tokens=np.array([rid], dtype=np.int32)))
     completed = f.run(max_iters=200)
     assert set(completed) == set(range(8))
-    assert f.stats["stolen"] > 0, "replica 1 should have stolen from replica 0"
+    stats = f.stats()
+    assert stats["totals"]["stolen"] > 0, "replica 1 should have stolen from replica 0"
+    # the thief's history is attributed to the thief, not the victim
+    assert stats["per_replica"][1]["stolen"] == stats["totals"]["stolen"]
+    assert stats["per_replica"][0]["stolen"] == 0
+    assert stats["per_replica"][0]["submitted"] == 8
 
 
 def test_victim_selection_rotates_instead_of_scanning_from_zero():
@@ -122,7 +127,8 @@ def test_victim_selection_rotates_instead_of_scanning_from_zero():
     f.submit(2, Request(rid=20, tokens=np.array([2], dtype=np.int32)))
 
     got = [f._next_request(0).rid for _ in range(3)]
-    assert f.stats["stolen"] == 3
+    assert f.counters["stolen"] == 3
+    assert f.stats()["per_replica"][0]["stolen"] == 3
     # old behavior: [10, 11, 20] (queue 2 starved until queue 1 drained);
     # rotation must visit queue 2 before finishing queue 1
     assert got.index(20) < 2, f"queue 2 starved: steal order {got}"
@@ -139,7 +145,8 @@ def test_victim_rotation_covers_all_queues_when_some_are_empty():
         got = f._next_request(0)
         assert got is not None and got.rid == 30
         f.submit(3, Request(rid=30, tokens=np.array([3], dtype=np.int32)))
-    assert f.stats["stolen"] == 3
+    assert f.counters["stolen"] == 3
+    assert f.stats()["per_replica"][0]["stolen"] == 3
 
 
 def test_ragged_slot_attention_matches_oracle():

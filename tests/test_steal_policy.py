@@ -205,7 +205,10 @@ def test_tight_bound_drains_one_queue_skew(policy):
     assert (res.mult[: state.n_tasks] == 1).all()
     # thieves flattened the one hot queue: near-perfect split
     assert res.makespan <= _cdiv(T, P) + bt
-    assert int(res.steals.sum()) > 0
+    assert res.steal_ratio > 0
+    # all T/bt tiles sat in the one hot queue and every one was claimed
+    assert res.per_queue_drained[0] == _cdiv(T, bt)
+    assert res.per_queue_drained[1:].sum() == 0
 
 
 @pytest.mark.parametrize("policy", ["scan", "cost"])

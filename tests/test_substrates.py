@@ -258,4 +258,4 @@ def test_work_stealing_frontend_completes_all():
     completed = fe.run()
     assert sorted(completed) == list(range(6))
     assert all(len(r.out) == 3 for r in completed.values())
-    assert fe.stats["stolen"] >= 1
+    assert fe.stats()["totals"]["stolen"] >= 1

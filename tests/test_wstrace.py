@@ -1,0 +1,392 @@
+"""Observability-layer tests (ISSUE 7 / DESIGN.md §8).
+
+The event rings are written from inside the megakernel with plain stores
+only, so the things worth pinning are the *decode contracts*, not the
+stores themselves:
+
+  1. ring decode round-trip — on seeded schedules the decoded stream
+     accounts for every extraction, and per-program cost/steal totals match
+     the aggregate ``work``/``steals`` counters bit for bit;
+  2. trace=False is free — a traced-off launch returns a ``WSRunResult``
+     bit-identical to the pre-trace baseline (and carries no rings);
+  3. adversarial rewind drills — rings are per-launch, so a relaunch on
+     rewound heads yields a second stream whose every record carries the
+     post-increment multiplicity 2 and still balances the launch counters;
+  4. steal provenance (hypothesis) — every steal event names a victim whose
+     queue held that live slot: ``victim == queue`` owner mapping,
+     ``slot < tail[queue]``, the slot's task is live, and on fresh launches
+     no (queue, slot) is claimed twice;
+  5. overflow-drop — a deliberately tiny ring keeps the run's prefix and
+     reports the exact number of dropped records;
+  6. export surfaces — Perfetto JSON structure (slices == events, balanced
+     flow arrows, counter samples), mesh phase rendering, and the serving
+     ``SchedulerMetrics`` snapshot.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+try:
+    from hypothesis import given, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.moe_ws.dispatch import route_to_tasks  # noqa: E402
+from repro.moe_ws.expert_kernel import run_moe_schedule  # noqa: E402
+from repro.pallas_ws.kernel import run_ws_schedule  # noqa: E402
+from repro.pallas_ws.queues import make_queue_state  # noqa: E402
+from repro.pallas_ws.tasks import F_OP, emit_flash_tasks  # noqa: E402
+from repro.wstrace.ring import (  # noqa: E402
+    EV_COST,
+    EV_KIND,
+    EV_MULT,
+    EV_PROG,
+    EV_QUEUE,
+    EV_ROUND,
+    EV_SLOT,
+    EV_VICTIM,
+    EVENT_WIDTH,
+    KIND_TAKE,
+    STEAL_KINDS,
+    decode_rings,
+)
+from repro.wstrace.metrics import SchedulerMetrics  # noqa: E402
+from repro.wstrace.perfetto import PID_MESH, to_perfetto  # noqa: E402
+from repro.wstrace.trace import WSTrace  # noqa: E402
+
+P = 3
+KEY = jax.random.PRNGKey(0)
+
+
+def _moe_setup(idx, gates, E, bt, seed=0):
+    T = idx.shape[0]
+    d, f = 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed % 997), 4)
+    x = jax.random.normal(ks[0], (T, d), jnp.float32)
+    w = (
+        jax.random.normal(ks[1], (E, d, f), jnp.float32) / 2.0,
+        jax.random.normal(ks[2], (E, d, f), jnp.float32) / 2.0,
+        jax.random.normal(ks[3], (E, f, d), jnp.float32) / 2.0,
+    )
+    tasks, routed = route_to_tasks(idx, gates, E, bt=bt)
+    state = make_queue_state(tasks, P, n_queues=E, partition="owner")
+    return x, w, tasks, routed, state
+
+
+def _run_traced(idx, gates, E, bt, policy, seed=0, **kw):
+    x, w, tasks, routed, state = _moe_setup(idx, gates, E, bt, seed)
+    res = run_moe_schedule(
+        state, x, routed.tok_idx, *w, bt=bt, steal=True,
+        steal_policy=policy, trace=True, **kw,
+    )
+    return state, res
+
+
+def _check_stream_vs_counters(state, res):
+    """The decode contract: the stream balances every aggregate counter."""
+    stream, dropped = decode_rings(res.events, res.ev_cursor)
+    assert (dropped == 0).all(), "default capacity must never drop"
+    assert stream.shape == (res.extractions, EVENT_WIDTH)
+    # (round, program)-sorted timeline
+    assert (np.diff(stream[:, EV_ROUND]) >= 0).all()
+    n_programs = res.events.shape[0]
+    steal_mask = np.isin(stream[:, EV_KIND], STEAL_KINDS)
+    for p in range(n_programs):
+        mine = stream[stream[:, EV_PROG] == p]
+        assert mine[:, EV_COST].sum() == res.work[p], p
+        assert np.isin(mine[:, EV_KIND], STEAL_KINDS).sum() == res.steals[p], p
+    assert steal_mask.sum() == int(res.steals.sum())
+    assert (stream[:, EV_MULT] >= 1).all(), "mult recorded post-increment"
+    return stream
+
+
+def check_ring_roundtrip(idx, gates, E, bt, policy, seed):
+    state, res = _run_traced(idx, gates, E, bt, policy, seed)
+    stream = _check_stream_vs_counters(state, res)
+    # fresh launch: every live slot claimed exactly once, and the trace
+    # view agrees with WSTrace's derived analytics
+    tr = WSTrace.from_run(state, res)
+    assert tr.n_events == res.extractions
+    assert tr.n_steals == int(res.steals.sum())
+    assert abs(tr.steal_ratio - res.steal_ratio) < 1e-12
+    np.testing.assert_array_equal(tr.per_queue_drain(), res.per_queue_drained)
+    util = tr.utilization()
+    assert len(util) == max(tr.makespan, 1)
+    assert (util >= 0).all() and (util <= 1).all()
+    # busy program-rounds integrate back to total work
+    assert round(util.sum() * tr.n_programs) == res.total_work
+    idle = tr.idle_attribution()
+    assert idle["total_idle"] == res.wasted_slots
+    return stream
+
+
+def check_steal_provenance(idx, gates, E, bt, policy, seed):
+    """§4 of the module docstring: every steal is a live claim of a victim
+    queue — the advisory may be stale, the slot may not be."""
+    state, res = _run_traced(idx, gates, E, bt, policy, seed)
+    stream, _ = decode_rings(res.events, res.ev_cursor)
+    tail = np.asarray(state.tail)
+    live = np.asarray(state.tasks)[:, :, F_OP] != -1
+    seen = set()
+    for ev in stream:
+        q, s, p = int(ev[EV_QUEUE]), int(ev[EV_SLOT]), int(ev[EV_PROG])
+        assert 0 <= q < state.n_queues and 0 <= s < tail[q], (q, s)
+        assert live[q, s], "claims address live tasks only"
+        assert (q, s) not in seen, "fresh launch: no duplicate claims"
+        seen.add((q, s))
+        if int(ev[EV_KIND]) == KIND_TAKE:
+            assert ev[EV_VICTIM] == -1
+            assert q == p % state.n_queues, "takes hit the own queue"
+        else:
+            assert q != p % state.n_queues, "steals are cross-queue"
+            expect = q if q < P else -1
+            assert ev[EV_VICTIM] == expect, (q, int(ev[EV_VICTIM]))
+            assert ev[EV_VICTIM] != p
+
+
+SEED_CASES = [
+    # (T, E, k, bt, skewed-to-one-expert?)
+    (12, 4, 1, 2, False),
+    (24, 6, 2, 4, False),
+    (24, 6, 1, 4, True),
+]
+
+
+@pytest.mark.parametrize("policy", ["scan", "cost"])
+@pytest.mark.parametrize("case", SEED_CASES)
+def test_ring_decode_roundtrip_seeded(policy, case):
+    T, E, k, bt, skew = case
+    rng = np.random.RandomState(7)
+    idx = (np.zeros((T, k), np.int32) if skew
+           else rng.randint(0, E, size=(T, k)).astype(np.int32))
+    gates = np.ones((T, k), np.float32)
+    check_ring_roundtrip(idx, gates, E, bt, policy, seed=0)
+    check_steal_provenance(idx, gates, E, bt, policy, seed=0)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        data=st.data(),
+        T=st.integers(6, 30),
+        E=st.integers(2, 6),
+        policy=st.sampled_from(["scan", "cost"]),
+    )
+    def test_ring_decode_roundtrip_random(data, T, E, policy):
+        k = data.draw(st.integers(1, 2), label="k")
+        bt = data.draw(st.sampled_from([2, 4]), label="bt")
+        idx = np.array(
+            [data.draw(st.lists(st.integers(0, E - 1), min_size=k, max_size=k))
+             for _ in range(T)], np.int32)
+        gates = np.ones((T, k), np.float32)
+        check_ring_roundtrip(idx, gates, E, bt, policy, seed=T)
+
+    @given(
+        data=st.data(),
+        E=st.integers(2, 6),
+        policy=st.sampled_from(["scan", "cost"]),
+    )
+    def test_steal_provenance_random(data, E, policy):
+        T = data.draw(st.integers(6, 30), label="T")
+        hot = data.draw(st.integers(0, E - 1), label="hot")
+        # skew mass onto one expert so steals actually happen
+        idx = np.full((T, 1), hot, np.int32)
+        n_off = data.draw(st.integers(0, T // 3), label="n_off")
+        for i in range(n_off):
+            idx[i, 0] = data.draw(st.integers(0, E - 1))
+        gates = np.ones((T, 1), np.float32)
+        check_steal_provenance(idx, gates, E, 2, policy, seed=E)
+
+
+# ---------------------------------------------------------------------------
+# trace=False is bit-identical to the pre-trace baseline
+# ---------------------------------------------------------------------------
+
+
+def test_trace_off_is_bit_identical():
+    T, E, k, bt = 24, 6, 2, 4
+    rng = np.random.RandomState(3)
+    idx = rng.randint(0, E, size=(T, k)).astype(np.int32)
+    gates = np.ones((T, k), np.float32)
+
+    runs = {}
+    for trace in (False, True):
+        x, w, tasks, routed, state = _moe_setup(idx, gates, E, bt, seed=1)
+        runs[trace] = run_moe_schedule(
+            state, x, routed.tok_idx, *w, bt=bt, steal=True,
+            steal_policy="cost", trace=trace,
+        )
+    off, on = runs[False], runs[True]
+    assert off.events is None and off.ev_cursor is None
+    assert on.events is not None
+    for f in ("head", "local_head", "taken", "remaining", "clock", "work",
+              "steals", "scanned", "mult"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(off, f)), np.asarray(getattr(on, f)), err_msg=f)
+    np.testing.assert_array_equal(np.asarray(off.out), np.asarray(on.out))
+
+
+# ---------------------------------------------------------------------------
+# adversarial rewind drill: per-launch rings stay balanced under duplication
+# ---------------------------------------------------------------------------
+
+
+def test_rewind_drill_stream_consistency():
+    lengths = np.array([32, 8, 8, 16])
+    B, S = len(lengths), int(max(lengths))
+    H, hd, bq, bk = 2, 8, 8, 8
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, H, S, hd))
+    v = jax.random.normal(ks[2], (B, H, S, hd))
+    tasks = emit_flash_tasks(lengths, H, bq, bk, causal=True)
+    state = make_queue_state(tasks, n_programs=4)
+
+    res1 = run_ws_schedule(state, q, k, v, causal=True, bq=bq, bk=bk,
+                           steal=True, trace=True)
+    stream1 = _check_stream_vs_counters(state, res1)
+    assert (stream1[:, EV_MULT] == 1).all()
+
+    # §7-style staleness: every Head dragged to 0, local bounds wiped
+    state.head = np.zeros_like(state.head)
+    state.local_head = np.zeros_like(state.local_head)
+    res2 = run_ws_schedule(
+        state, q, k, v, causal=True, bq=bq, bk=bk, steal=True,
+        out=res1.out, mult=jnp.asarray(res1.mult), trace=True,
+    )
+    stream2, dropped = decode_rings(res2.events, res2.ev_cursor)
+    assert (dropped == 0).all()
+    # rings are per-launch: the second stream holds exactly the re-claims
+    assert len(stream2) == state.n_tasks
+    assert (stream2[:, EV_MULT] == 2).all(), "post-increment mult of the dup"
+    for p in range(4):
+        mine = stream2[stream2[:, EV_PROG] == p]
+        assert mine[:, EV_COST].sum() == res2.work[p]
+        assert np.isin(mine[:, EV_KIND], STEAL_KINDS).sum() == res2.steals[p]
+
+
+# ---------------------------------------------------------------------------
+# overflow-drop semantics
+# ---------------------------------------------------------------------------
+
+
+def test_overflow_drop_keeps_prefix_and_counts():
+    T, E, k, bt = 24, 6, 1, 4
+    idx = np.zeros((T, k), np.int32)
+    gates = np.ones((T, k), np.float32)
+    cap = 2
+    state, res = _run_traced(idx, gates, E, bt, "cost", trace_capacity=cap)
+    stream, dropped = decode_rings(res.events, res.ev_cursor)
+    assert len(stream) + int(dropped.sum()) == res.extractions
+    assert len(stream) <= cap * P
+    np.testing.assert_array_equal(
+        dropped, np.maximum(np.asarray(res.ev_cursor) - cap, 0))
+    # the surviving records are each program's *first* claims: rounds
+    # nondecreasing per program and nothing is garbage
+    for p in range(P):
+        mine = stream[stream[:, EV_PROG] == p]
+        assert (np.diff(mine[:, EV_ROUND]) >= 0).all()
+        assert (mine[:, EV_COST] > 0).all()
+    tr = WSTrace.from_run(state, res)
+    assert tr.summary()["dropped"] == int(dropped.sum())
+
+
+# ---------------------------------------------------------------------------
+# compressed no-steal drain still traces every claim
+# ---------------------------------------------------------------------------
+
+
+def test_compressed_static_drain_traces_every_claim():
+    T, E, k, bt = 18, 3, 1, 2
+    rng = np.random.RandomState(11)
+    idx = rng.randint(0, E, size=(T, k)).astype(np.int32)
+    gates = np.ones((T, k), np.float32)
+    x, w, tasks, routed, state = _moe_setup(idx, gates, E, bt, seed=2)
+    res = run_moe_schedule(
+        state, x, routed.tok_idx, *w, bt=bt, steal=False,
+        compress_runs=True, trace=True,
+    )
+    stream, dropped = decode_rings(res.events, res.ev_cursor)
+    assert (dropped == 0).all(), "compressed capacity defaults to state.capacity"
+    assert len(stream) == res.extractions
+    assert (stream[:, EV_KIND] == KIND_TAKE).all(), "no thieves when steal=False"
+    # virtual rounds: each record's busy interval ends inside the makespan
+    ends = stream[:, EV_ROUND] + stream[:, EV_COST]
+    assert int(ends.max()) == res.makespan
+
+
+# ---------------------------------------------------------------------------
+# export surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_perfetto_export_structure():
+    T, E, k, bt = 24, 6, 1, 4
+    idx = np.zeros((T, k), np.int32)  # one hot queue -> guaranteed steals
+    gates = np.ones((T, k), np.float32)
+    state, res = _run_traced(idx, gates, E, bt, "cost")
+    tr = WSTrace.from_run(state, res)
+    doc = to_perfetto(tr)
+    json.dumps(doc)  # must be serializable as-is
+    evs = doc["traceEvents"]
+    slices = [e for e in evs if e["ph"] == "X" and e["pid"] == 0]
+    assert len(slices) == tr.n_events
+    starts = [e for e in evs if e["ph"] == "s"]
+    ends = [e for e in evs if e["ph"] == "f"]
+    assert len(starts) == len(ends) == tr.n_steals, "one flow arrow per steal"
+    assert {e["id"] for e in starts} == {e["id"] for e in ends}
+    counters = [e for e in evs if e["ph"] == "C"]
+    # one initial sample per queue + one per claim
+    assert len(counters) == tr.n_queues + tr.n_events
+    final = {}
+    for c in counters:
+        final[c["name"]] = c["args"]["tiles"]
+    assert all(v == 0 for v in final.values()), "every queue drains to 0"
+
+
+def test_perfetto_mesh_phases():
+    from repro.mesh_ws import mesh_wstrace
+
+    tele = np.array(
+        # phase1, phase2, steal, advisory, victim, stole, take_tiles, mult
+        [[4, 3, 0, 6, 0, 0, 0, 6],
+         [4, 0, 2, 1, 0, 1, 3, 4]], np.int64)
+    tr = mesh_wstrace(tele, collective_bytes=512)
+    assert tr.makespan == 7
+    doc = to_perfetto(tr)
+    json.dumps(doc)
+    mesh = [e for e in doc["traceEvents"] if e.get("pid") == PID_MESH]
+    names = [e["name"] for e in mesh if e["ph"] == "X"]
+    assert names.count("phase1 local drain") == 2
+    assert "phase2 remote steal" in names
+    flows = [e for e in mesh if e["ph"] in ("s", "f")]
+    assert len(flows) == 2, "one victim->thief arrow for the one remote steal"
+    byte_counters = [e for e in mesh if e["ph"] == "C"
+                     and e["name"].startswith("collective bytes")]
+    assert len(byte_counters) == 2
+    assert all(c["args"]["value"] == 512 for c in byte_counters)
+
+
+def test_scheduler_metrics_snapshot():
+    m = SchedulerMetrics(slots=4)
+    empty = m.snapshot()
+    assert empty["steps"] == 0 and empty["latency_ms"] is None
+    for i in range(10):
+        m.record_step(0.001 * (i + 1), n_live=2)
+    m.record_admission(3)
+    m.record_completion()
+    snap = m.snapshot()
+    json.dumps(snap)
+    assert snap["steps"] == 10
+    assert snap["admitted"] == 3 and snap["completed"] == 1
+    assert snap["slot_utilization"] == pytest.approx(0.5)
+    assert snap["latency_ms"]["p50"] == pytest.approx(5.5)
+    assert snap["latency_ms"]["max"] == pytest.approx(10.0)
+    assert snap["latency_ms"]["p50"] <= snap["latency_ms"]["p99"]
