@@ -4,7 +4,8 @@ The interpret-mode schedulers are deterministic — makespans, wasted slots,
 and scan-traffic counters are exact replays of the lockstep model — so a
 perf regression shows up as a *number change*, not a noisy timing.  This
 job re-runs the quick grid (`ragged_attention`, `moe_dispatch`,
-`steal_policy`, `mesh_dispatch`, all ``--dry-run``), summarizes it with the same reducer
+`steal_policy`, `mesh_dispatch`, `serving_traffic`, all ``--dry-run``),
+summarizes it with the same reducer
 that builds BENCH.json, and compares against the committed BENCH.json
 "smoke" trajectory:
 
@@ -21,6 +22,10 @@ that builds BENCH.json, and compares against the committed BENCH.json
 * the custom-VJP grad rows must be present (once committed) and match the
   no-drop oracle's gradients to fp32 tolerance — an absolute gate, since a
   wrong backward is a correctness bug, not noise;
+* the serving replay (seeded trace, single-threaded — deterministic) must
+  keep every unified/split cell: steps and utilization within tolerance,
+  and the unified step's token streams **identical** to the split-launch
+  oracle with no lost or duplicated request — absolute gates;
 * a ``trace=False`` replay of the headline ragged/moe cells must reproduce
   the committed (traced) makespans **exactly** — event tracing must be free
   when off (ISSUE 7; the trace=False lowering is the pre-trace kernel).
@@ -59,7 +64,7 @@ def compare(fresh: dict, committed: dict, tol: float) -> list:
     # summary (bench not run, dryrun file absent) is a failure, never a
     # silent skip, or the gate would pass vacuously
     for section in ("ragged_attention", "moe_dispatch", "steal_policy",
-                    "mesh_dispatch"):
+                    "mesh_dispatch", "serving"):
         if committed.get(section) and not fresh.get(section):
             errs.append(f"{section}: committed reference exists but the "
                         "fresh dry-run summary is missing — bench not run?")
@@ -132,6 +137,34 @@ def compare(fresh: dict, committed: dict, tol: float) -> list:
         _check(errs, f"{tag} pool schedule parity",
                n["pool_makespan"] == n["ws_cost_makespan"],
                f"pool {n['pool_makespan']} != ws {n['ws_cost_makespan']}")
+    s_new = {(r["mode"], r["path"]): r for r in fresh.get("serving", [])}
+    s_old = {(r["mode"], r["path"]): r for r in committed.get("serving", [])}
+    if s_old and not set(s_new) & set(s_old):
+        errs.append(
+            "serving: no (mode, path) cell in common between the fresh "
+            f"dry-run {sorted(s_new)} and the committed reference "
+            f"{sorted(s_old)} — refresh BENCH.json together with the trace"
+        )
+    for key in sorted(set(s_new) & set(s_old)):
+        n, o = s_new[key], s_old[key]
+        tag = f"serving {key[0]}/{key[1]}"
+        # absolute gates first: correctness, not perf
+        _check(errs, f"{tag} stream parity", n["streams_match"],
+               "unified token streams no longer match the split-launch oracle")
+        _check(errs, f"{tag} completions",
+               n["completed"] == o["completed"] and n["rejected"] == o["rejected"],
+               f"completed/rejected {n['completed']}/{n['rejected']} != "
+               f"committed {o['completed']}/{o['rejected']} on the same "
+               "seeded trace")
+        # deterministic schedule shape: the seeded replay is single-threaded,
+        # so step counts and utilization are exact — tolerance only covers
+        # benign re-tuning landing with a refreshed BENCH.json
+        _check(errs, f"{tag} steps",
+               n["steps"] <= o["steps"] * hi,
+               f"{n['steps']} > {o['steps']} * {hi}")
+        _check(errs, f"{tag} slot utilization",
+               n["slot_utilization"] >= o["slot_utilization"] * lo,
+               f"{n['slot_utilization']} < {o['slot_utilization']} * {lo}")
     return errs
 
 
@@ -181,6 +214,7 @@ def main(argv=None):
             mesh_dispatch,
             moe_dispatch,
             ragged_attention,
+            serving_traffic,
             steal_policy,
         )
 
@@ -189,6 +223,7 @@ def main(argv=None):
         status |= moe_dispatch.main(["--dry-run"])
         status |= steal_policy.main(["--dry-run"])
         status |= mesh_dispatch.main(["--dry-run"])  # re-execs on 8 devices
+        status |= serving_traffic.main(["--dry-run"])
 
     if not BENCH_JSON.exists():
         print(f"[perf-smoke] {BENCH_JSON} missing — commit the trajectory first")

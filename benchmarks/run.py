@@ -12,6 +12,8 @@ Sections:
                    shared-pool vs padded traced queue layouts (§3.6)
   [mesh]           cross-device mesh-ws vs per-device-static expert
                    sharding on 8 forced host devices (§7)
+  [serving]        replayed arrival traffic through the WS frontend —
+                   unified one-launch engine step vs split-launch (§5)
   [loader]         L2 host pipeline — work-stealing loader throughput
   [roofline]       dry-run roofline table (if results/dryrun.jsonl exists)
 
@@ -112,6 +114,26 @@ def summarize(quick: bool) -> dict:
             collective_bytes_analytic=r["collective_bytes"]["analytic_mesh_ws"],
             bit_identical=r["mesh_ws"]["bit_identical"],
         )
+    serving = _load("BENCH_serving", quick)
+    if serving:
+        # deterministic columns only: the trace replay is seeded and the
+        # engine single-threaded, so steps / utilization / counters / stream
+        # parity are exact; wall-clock latencies stay in BENCH_serving.json
+        out["serving"] = [
+            dict(
+                mode=r["mode"],
+                path=r["path"],
+                steps=r["steps"],
+                tokens_out=r["tokens_out"],
+                slot_utilization=r["slot_utilization"],
+                completed=len(r["completed"]),
+                rejected=len(r["rejected"]),
+                stolen=r["counters"]["stolen"],
+                dup_completed=r["counters"]["dup_completed"],
+                streams_match=serving["streams_match"][r["mode"]],
+            )
+            for r in serving["rows"]
+        ]
     policy = _load("BENCH_policy", quick)
     if policy:
         out["steal_policy"] = [
@@ -153,7 +175,7 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--sections",
-        default="zero-cost,spanning-tree,scheduler,ragged,moe,policy,mesh,loader,roofline",
+        default="zero-cost,spanning-tree,scheduler,ragged,moe,policy,mesh,serving,loader,roofline",
     )
     args = ap.parse_args(argv)
     sections = set(args.sections.split(","))
@@ -211,7 +233,15 @@ def main(argv=None):
         # on 8 forced host devices, or any row loses bitwise oracle parity
         status |= mesh_dispatch.main(["--dry-run"] if args.quick else [])
 
-    if any(s in sections for s in ("ragged", "moe", "policy", "mesh")):
+    if "serving" in sections:
+        print("\n== [serving] replayed traffic: unified vs split engine step ==")
+        from . import serving_traffic
+
+        # nonzero when any rid is lost/duplicated or the unified one-launch
+        # step's token streams diverge from the split-launch oracle
+        status |= serving_traffic.main(["--dry-run"] if args.quick else [])
+
+    if any(s in sections for s in ("ragged", "moe", "policy", "mesh", "serving")):
         compose_bench_json(quick=args.quick)
 
     if "loader" in sections:

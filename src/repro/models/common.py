@@ -53,7 +53,11 @@ def swiglu(x, wg, wu, wd, pet=None):
 
 
 def rope_freqs(head_dim: int, theta: float):
-    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    # iota-based so the table traces as a primitive (jnp.arange with static
+    # bounds evaluates eagerly, which a pallas kernel body cannot capture);
+    # iota * 2 hits the same exact small-integer floats as arange(0, hd, 2).
+    evens = jax.lax.iota(jnp.float32, head_dim // 2) * 2.0
+    return 1.0 / (theta ** (evens / head_dim))
 
 
 def apply_rope(x, positions, theta: float):

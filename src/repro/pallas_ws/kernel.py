@@ -83,6 +83,7 @@ from ..wstrace.ring import (
     EV_COST,
     EV_KIND,
     EV_MULT,
+    EV_OP,
     EV_PROG,
     EV_QUEUE,
     EV_ROUND,
@@ -115,9 +116,12 @@ STEAL_POLICIES = ("cost", "scan")
 # Order of the mutable (input-output aliased) queue/telemetry arrays every
 # family launch carries: head, local_head, taken, remaining, clock, work,
 # steals, scanned, mult, out.  ``launch_ws_grid`` owns this layout.  A
-# traced launch (``trace=True``) appends two more — the event rings and
-# their per-program cursors (``repro.wstrace.ring``) — after ``out``.
-N_MUTABLE = 10
+# multi-output launch (``out`` given as a tuple — the unified engine step)
+# replaces the single ``out`` slot with one slot per output, and a traced
+# launch (``trace=True``) appends two more — the event rings and their
+# per-program cursors (``repro.wstrace.ring``) — after the outputs.
+N_SCHED_MUTABLE = 9   # head..mult, before the family outputs
+N_MUTABLE = 10        # the single-output layout every pre-unified caller uses
 
 
 def _slot_field(tasks_ref, pool_off_ref, v, s, field, *, pool: bool):
@@ -157,7 +161,7 @@ def _probe_slot(
 
 def ws_try_extract(
     r, p, head_ref, local_head_ref, tail_ref, remaining_ref, tasks_ref,
-    clock_ref, pool_off_ref=None,
+    clock_ref, pool_off_ref=None, stage_ref=None,
     *, n_queues: int, capacity: int, steal: bool,
     steal_policy: str = "cost", pool: bool = False,
 ):
@@ -167,6 +171,13 @@ def ws_try_extract(
     configured policy and claims the first live slot with plain writes only.
     Returns ``(found, queue, slot, slots_read)``; no-op (found=False) while
     the program's clock says it is still busy with its previous tile.
+
+    ``stage_ref`` (optional, [n_queues] int32): per-queue open rounds for
+    stage-gated launches (the unified engine step) — a queue is invisible to
+    probes and to the victim mask until ``stage_ref[q] <= r``.  Gating is a
+    pure *input* (no cross-program signalling): the stage windows are sized
+    on the host by the Graham bound so every task of stage ``s`` has
+    finished before ``stage_ref`` opens stage ``s+1`` (DESIGN.md §5).
     """
     assert steal_policy in STEAL_POLICIES, steal_policy
     idle = clock_ref[p] <= r
@@ -174,6 +185,9 @@ def ws_try_extract(
         _probe_slot, tasks_ref, pool_off_ref, tail_ref,
         pool=pool, capacity=capacity,
     )
+
+    def stage_open(v):
+        return jnp.bool_(True) if stage_ref is None else stage_ref[v] <= r
 
     def claim_writes(v, h):
         head_ref[v] = h + 1            # plain write — no CAS
@@ -186,7 +200,7 @@ def ws_try_extract(
             found, fq, fs, nread = carry
             v = jax.lax.rem(p + j, n_queues)
             h = jnp.maximum(local_head_ref[p, v], head_ref[v])  # RMaxRead
-            op, issued = probe(v, h, ~found)
+            op, issued = probe(v, h, (~found) & stage_open(v))
             live = op != BOTTOM
             claim = (~found) & live
 
@@ -209,7 +223,7 @@ def ws_try_extract(
         """O(1) policy: own-queue probe, then cost-aware victim argmax."""
         own = jax.lax.rem(p, n_queues)
         h0 = jnp.maximum(local_head_ref[p, own], head_ref[own])  # RMaxRead
-        op0, issued0 = probe(own, h0, jnp.bool_(True))
+        op0, issued0 = probe(own, h0, stage_open(own))
         own_live = op0 != BOTTOM
 
         @pl.when(own_live)
@@ -228,6 +242,8 @@ def ws_try_extract(
         lh = local_head_ref[pl.ds(p, 1), :].reshape(n_queues)
         heads = jnp.maximum(lh, head_ref[:])
         stealable = heads < tail_ref[:]
+        if stage_ref is not None:
+            stealable &= stage_ref[:] <= r
         score = jnp.where(stealable, jnp.maximum(remaining_ref[:], 1), 0)
         v = jnp.argmax(score).astype(jnp.int32)
         can = (~own_live) & (jnp.max(score) > 0)
@@ -288,6 +304,9 @@ def _generic_ws_kernel(
     steal_policy: str,
     pool: bool,
     compress: bool,
+    n_outs: int = 1,
+    multi_out: bool = False,
+    staged: bool = False,
     trace: bool = False,
     trace_capacity: int = 0,
     steal_kind: int = KIND_STEAL_COST,
@@ -295,27 +314,38 @@ def _generic_ws_kernel(
     """Scheduler shell around a family ``execute`` body.
 
     Ref layout (positional, fixed by :func:`launch_ws_grid`): the mutable
-    stale input snapshots (N_MUTABLE, +2 when ``trace``), the tasks array,
-    the (static) tails, the pool segment offsets when ``pool``, ``n_pure``
+    stale input snapshots (9 scheduler arrays + ``n_outs`` outputs, +2 when
+    ``trace``), the tasks array, the (static) tails, the pool segment
+    offsets when ``pool``, the stage-open rounds when ``staged``, ``n_pure``
     family inputs, then the live (aliased) output refs in the same order as
     the snapshots.
+
+    ``multi_out`` launches call ``execute(rec, pure, outs, mult_ref)`` with
+    the tuple of output refs plus the live multiplicity counters (the
+    unified step's glue phases normalize accumulators in-kernel); the
+    single-output convention stays ``execute(rec, pure, out_ref)``.
     """
-    n_mut = N_MUTABLE + (2 if trace else 0)
+    n_live = N_SCHED_MUTABLE + n_outs
+    n_mut = n_live + (2 if trace else 0)
     tasks_ref = refs[n_mut]
     tail_ref = refs[n_mut + 1]
     off = n_mut + 2
     pool_off_ref = refs[off] if pool else None
     off += int(pool)
+    stage_ref = refs[off] if staged else None
+    off += int(staged)
     pure = refs[off: off + n_pure]
     live = refs[off + n_pure:]
     (head_ref, local_head_ref, taken_ref, remaining_ref, clock_ref, work_ref,
-     steals_ref, scanned_ref, mult_ref, out_ref) = live[:N_MUTABLE]
-    ev_ref, ev_cursor_ref = live[N_MUTABLE:] if trace else (None, None)
+     steals_ref, scanned_ref, mult_ref) = live[:N_SCHED_MUTABLE]
+    out_refs = live[N_SCHED_MUTABLE:n_live]
+    out_ref = out_refs if multi_out else out_refs[0]
+    ev_ref, ev_cursor_ref = live[n_live:] if trace else (None, None)
 
     r = pl.program_id(0)
     p = pl.program_id(1)
 
-    def trace_append(fq, fs, tid, cost, t0):
+    def trace_append(fq, fs, tid, cost, t0, op):
         """Append one extraction record to program ``p``'s event ring —
         plain stores only (guarded slot writes + a plain cursor bump), so
         the traced lowering stays inside the fence-free audit.  The ring
@@ -344,6 +374,7 @@ def _generic_ws_kernel(
             ev_ref[p, c, EV_KIND] = kind
             ev_ref[p, c, EV_VICTIM] = victim
             ev_ref[p, c, EV_MULT] = mult_ref[tid]
+            ev_ref[p, c, EV_OP] = op
 
         ev_cursor_ref[p] = c + 1
 
@@ -357,7 +388,10 @@ def _generic_ws_kernel(
             # the tile-slots the program is busy (also correct inside a
             # compressed drain run, where the clock advances per extraction)
             t0 = jnp.maximum(clock_ref[p], r)
-        execute(rec, pure, out_ref)
+        if multi_out:
+            execute(rec, pure, out_ref, mult_ref)
+        else:
+            execute(rec, pure, out_ref)
         ws_account(
             r, p, fq, fs, rec(F_TID), rec(F_COST),
             taken_ref, remaining_ref, clock_ref, work_ref, steals_ref,
@@ -365,7 +399,7 @@ def _generic_ws_kernel(
             advisory=advisory,
         )
         if trace:
-            trace_append(fq, fs, rec(F_TID), rec(F_COST), t0)
+            trace_append(fq, fs, rec(F_TID), rec(F_COST), t0, rec(F_OP))
         return rec(F_COST)
 
     if compress:
@@ -376,6 +410,7 @@ def _generic_ws_kernel(
         # makespan/work telemetry to the per-round drain), but the grid
         # needs O(1) rounds instead of max-queue-cost rounds.
         assert not steal, "run compression models the no-steal schedule only"
+        assert not staged, "stage gating needs the per-round lockstep"
         own = jax.lax.rem(p, n_queues)
 
         def probe_own():
@@ -417,7 +452,7 @@ def _generic_ws_kernel(
 
     found, fq, fs, nread = ws_try_extract(
         r, p, head_ref, local_head_ref, tail_ref, remaining_ref, tasks_ref,
-        clock_ref, pool_off_ref,
+        clock_ref, pool_off_ref, stage_ref,
         n_queues=n_queues, capacity=capacity, steal=steal,
         steal_policy=steal_policy, pool=pool,
     )
@@ -544,13 +579,14 @@ def launch_ws_grid(
     state: QueueState,
     execute: Callable,
     pure: Sequence[jax.Array],
-    out: jax.Array,
+    out,
     *,
     steal: bool = True,
     steal_policy: str = "cost",
     rounds: Optional[int] = None,
     mult: Optional[jax.Array] = None,
     compress_runs: Optional[bool] = None,
+    stage_open: Optional[jax.Array] = None,
     interpret: bool = True,
     trace: bool = False,
     trace_capacity: Optional[int] = None,
@@ -566,6 +602,17 @@ def launch_ws_grid(
     no-steal launches drain whole owner runs per grid cell (§3.6), steal
     launches keep the one-extraction-per-round lockstep so thief
     concurrency stays faithfully modeled.
+
+    ``out`` may be a *tuple* of arrays (the unified engine step's caches,
+    activation buffers, routing scratch, logits).  The shell then calls
+    ``execute(rec, pure_refs, out_refs, mult_ref)`` — the tuple of live
+    output refs plus the multiplicity counters, so mixed-family bodies can
+    normalize accumulators in-kernel — and ``WSRunResult.out`` is the tuple
+    in the same order.  ``stage_open`` ([n_queues] int32, optional) gates
+    extraction per queue by round (see :func:`ws_try_extract`): the
+    mixed-mode launch encodes its inter-stage dependencies as host-computed
+    open rounds instead of device-side waiting, keeping the lowering free
+    of fences.
 
     ``trace=True`` additionally records every extraction into per-program
     event rings (``WSRunResult.events``/``ev_cursor``; schema in
@@ -583,6 +630,11 @@ def launch_ws_grid(
     compress = (not steal) if compress_runs is None else compress_runs
     if compress and steal:
         raise ValueError("compress_runs models the no-steal schedule only")
+    if stage_open is not None and compress:
+        raise ValueError("stage_open needs the per-round lockstep "
+                         "(compress_runs=False)")
+    multi_out = isinstance(out, (tuple, list))
+    outs_in = tuple(out) if multi_out else (out,)
     rounds = (
         default_rounds(state, steal, compress_runs=compress)
         if rounds is None else rounds
@@ -610,6 +662,9 @@ def launch_ws_grid(
         steal_policy=steal_policy,
         pool=pool,
         compress=compress,
+        n_outs=len(outs_in),
+        multi_out=multi_out,
+        staged=stage_open is not None,
         trace=trace,
         trace_capacity=trace_capacity,
         steal_kind=steal_kind,
@@ -628,8 +683,7 @@ def launch_ws_grid(
         jnp.zeros((P,), jnp.int32),   # steals
         jnp.zeros((P,), jnp.int32),   # scanned
         jnp.asarray(mult),
-        jnp.asarray(out),
-    ]
+    ] + [jnp.asarray(o) for o in outs_in]
     if trace:
         mutable += [
             jnp.full((P, trace_capacity, EVENT_WIDTH), -1, jnp.int32),
@@ -638,6 +692,8 @@ def launch_ws_grid(
     pure_arrays = [jnp.asarray(state.tasks), jnp.asarray(state.tail)]
     if pool:
         pure_arrays.append(jnp.asarray(state.pool_off))
+    if stage_open is not None:
+        pure_arrays.append(jnp.asarray(stage_open, dtype=jnp.int32))
     pure_arrays += [jnp.asarray(a) for a in pure]
     outs = pl.pallas_call(
         kernel,
@@ -648,9 +704,14 @@ def launch_ws_grid(
         input_output_aliases={i: i for i in range(len(mutable))},
         interpret=interpret,
     )(*mutable, *pure_arrays)
-    (head, local_head, taken, remaining, clock, work, steals, scanned, mult,
-     out) = outs[:N_MUTABLE]
-    events, ev_cursor = outs[N_MUTABLE:] if trace else (None, None)
+    n_live = N_SCHED_MUTABLE + len(outs_in)
+    (head, local_head, taken, remaining, clock, work, steals, scanned,
+     mult) = outs[:N_SCHED_MUTABLE]
+    out = (
+        tuple(outs[N_SCHED_MUTABLE:n_live]) if multi_out
+        else outs[N_SCHED_MUTABLE]
+    )
+    events, ev_cursor = outs[n_live:] if trace else (None, None)
 
     def host(a):
         # eager launches hand numpy views back to the drills/telemetry;

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -41,9 +42,11 @@ from repro.core import EMPTY, WSWMult
 from repro.models import (
     Caches,
     decode_step,
+    decode_step_unified,
     decode_step_ws,
     init_caches,
     prefill,
+    unified_step_supported,
     ws_decode_supported,
 )
 from repro.wstrace.metrics import SchedulerMetrics
@@ -89,9 +92,12 @@ class ContinuousBatcher:
         slots: int,
         capacity: int,
         greedy: bool = True,
+        temperature: float = 1.0,
+        sample_seed: int = 0,
         attn_schedule: str = "ws",
         use_ws: bool = True,
         jit_ws: bool = False,
+        unified_step: bool = False,
     ):
         self.params, self.cfg = params, cfg
         self.B, self.cap = slots, capacity
@@ -100,6 +106,9 @@ class ContinuousBatcher:
         self.pos = np.zeros(slots, dtype=np.int32)  # next write slot per seq
         self.budget = np.zeros(slots, dtype=np.int32)
         self.greedy = greedy
+        self.temperature = float(temperature)
+        # seeded host-side sampler so greedy=False runs are reproducible
+        self._rng = np.random.default_rng(sample_seed)
         # Decode attention schedule: with `use_ws` (the default, for the
         # architectures decode_step_ws covers) every engine step routes the
         # slots' ragged lengths through the repro.pallas_ws scheduler
@@ -112,6 +121,16 @@ class ContinuousBatcher:
             raise ValueError(f"attn_schedule must be 'ws' or 'static': {attn_schedule!r}")
         self.attn_schedule = attn_schedule
         self.use_ws = bool(use_ws and ws_decode_supported(cfg))
+        # Unified mode: ONE launch_ws_grid launch per engine step carries the
+        # decode tiles, at most one admitted prompt's prefill tiles, and (MoE)
+        # the expert tiles (models.unified, DESIGN.md §5).  admit() defers
+        # the prefill into the next step instead of running it standalone;
+        # the split-launch path below stays as the escape hatch and oracle.
+        if unified_step and not unified_step_supported(cfg):
+            raise ValueError(f"unified_step unsupported for config {cfg.name!r}")
+        self.unified = bool(unified_step)
+        self._pending = deque()          # (slot, Request) awaiting prefill
+        self._pending_slots: set = set()
         if self.use_ws and jit_ws:
             self._decode = jit_decode_step_ws(cfg, schedule=attn_schedule)
         elif self.use_ws:
@@ -129,22 +148,59 @@ class ContinuousBatcher:
         # admissions) — read it back via stats()
         self.metrics = SchedulerMetrics(slots=slots)
 
+    # -- sampling --------------------------------------------------------------
+    def _select(self, logits) -> np.ndarray:
+        """Next-token choice per row honoring the `greedy` flag: argmax, or
+        seeded temperature sampling from softmax(logits / T)."""
+        lg = np.asarray(logits, dtype=np.float32)
+        if self.greedy:
+            return lg.argmax(axis=-1)
+        z = lg / max(self.temperature, 1e-6)
+        z = z - z.max(axis=-1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(axis=-1, keepdims=True)
+        return np.array(
+            [self._rng.choice(p.shape[-1], p=row) for row in p], dtype=np.int64
+        )
+
     # -- admission ------------------------------------------------------------
-    def admit(self, req: Request) -> bool:
-        free = [i for i, r in enumerate(self.live) if r is None]
-        if not free:
-            return False
-        slot = free[0]
-        batch = {"tokens": jnp.asarray(req.tokens, jnp.int32)[None, :]}
-        logits, c1 = self._prefill(self.params, batch)
-        # splice the batch-1 caches into this slot
+    def _splice_slot(self, slot: int, c1) -> None:
+        """Splice batch-1 prefill caches into the slot's batch row."""
+
         def splice(full, one):
             if not hasattr(one, "ndim"):
                 return full
             return jax.lax.dynamic_update_slice_in_dim(full, one, slot, axis=1)
 
         self.caches = jax.tree_util.tree_map(splice, self.caches, c1)
-        first = int(jnp.argmax(logits[0]))
+
+    def admit(self, req: Request) -> bool:
+        # a prompt of capacity-1 tokens is the longest the slot can hold:
+        # the splice needs len(tokens) cache rows plus one for the first
+        # generated token (admitting len >= capacity corrupts the splice)
+        if not 0 < len(req.tokens) < self.cap:
+            return False
+        free = [
+            i for i, r in enumerate(self.live)
+            if r is None and i not in self._pending_slots
+        ]
+        if not free:
+            return False
+        slot = free[0]
+        if self.unified:
+            # defer the prefill into the next unified step — it rides the
+            # same launch as that step's decode tiles
+            self.live[slot] = req
+            self._pending.append((slot, req))
+            self._pending_slots.add(slot)
+            self.pos[slot] = 0
+            self.budget[slot] = req.max_new
+            self.metrics.record_admission()
+            return True
+        batch = {"tokens": jnp.asarray(req.tokens, jnp.int32)[None, :]}
+        logits, c1 = self._prefill(self.params, batch)
+        self._splice_slot(slot, c1)
+        first = int(self._select(np.asarray(logits[:1]))[0])
         req.out.append(first)
         self.live[slot] = req
         self.pos[slot] = len(req.tokens)
@@ -156,6 +212,8 @@ class ContinuousBatcher:
     def step(self) -> List[Request]:
         if not any(r is not None for r in self.live):
             return []
+        if self.unified:
+            return self._step_unified()
         n_live = self.n_live
         t0 = time.perf_counter()
         tokens = np.zeros((self.B, 1), dtype=np.int32)
@@ -167,10 +225,60 @@ class ContinuousBatcher:
             self.params, self.caches, jnp.asarray(tokens), jnp.asarray(self.pos)
         )
         done = []
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))  # syncs the device step
+        nxt = self._select(np.asarray(logits))  # syncs the device step
         self.metrics.record_step(time.perf_counter() - t0, n_live)
         for i, r in enumerate(self.live):
             if r is None:
+                continue
+            r.out.append(int(nxt[i]))
+            self.pos[i] += 1
+            self.budget[i] -= 1
+            if self.budget[i] <= 0 or self.pos[i] >= self.cap - 1:
+                done.append(r)
+                self.live[i] = None
+        if done:
+            self.metrics.record_completion(len(done))
+        return done
+
+    def _step_unified(self) -> List[Request]:
+        """One engine step = ONE mixed-mode megakernel launch: all live
+        slots' decode tiles plus (at most) one pending admission's prefill
+        tiles, stage-gated in a single `launch_ws_grid` grid."""
+        fold = self._pending.popleft() if self._pending else None
+        n_live = self.n_live
+        t0 = time.perf_counter()
+        tokens = np.zeros((self.B, 1), dtype=np.int32)
+        for i, r in enumerate(self.live):
+            if r is not None and r.out:
+                tokens[i, 0] = r.out[-1]
+        ptok = (
+            jnp.asarray(fold[1].tokens, jnp.int32)[None, :]
+            if fold is not None else None
+        )
+        logits, self.caches, rep = decode_step_unified(
+            self.params, self.cfg, self.caches, jnp.asarray(tokens), self.pos,
+            prefill_tokens=ptok,
+        )
+        done = []
+        nxt = self._select(np.asarray(logits))  # syncs the device step
+        self.metrics.record_step(time.perf_counter() - t0, n_live)
+        folded_slot = -1
+        if fold is not None:
+            slot, req = fold
+            self._pending_slots.discard(slot)
+            folded_slot = slot
+            self._splice_slot(slot, Caches(kv=rep.prefill_kv))
+            first = int(self._select(np.asarray(rep.prefill_logits))[0])
+            req.out.append(first)
+            self.pos[slot] = len(req.tokens)
+            self.budget[slot] = req.max_new - 1
+            if self.budget[slot] <= 0 or self.pos[slot] >= self.cap - 1:
+                done.append(req)
+                self.live[slot] = None
+        for i, r in enumerate(self.live):
+            # slots still awaiting their prefill fold (and the slot folded
+            # this step) produced no decode token this launch
+            if r is None or i in self._pending_slots or i == folded_slot:
                 continue
             r.out.append(int(nxt[i]))
             self.pos[i] += 1
@@ -234,11 +342,17 @@ class WorkStealingFrontend:
         self.batchers = [make_batcher() for _ in range(n_replicas)]
         self.steal = steal
         self.completed: Dict[int, Request] = {}
+        # requests a batcher refused for cause (e.g. prompt >= cache
+        # capacity) — surfaced here instead of being silently dropped
+        self.rejected: Dict[int, Request] = {}
         # aggregate counters plus the per-replica scheduling history the
         # run used to discard — read both back via stats()
-        self.counters = {"admitted": 0, "stolen": 0, "dup_completed": 0}
+        self.counters = {
+            "admitted": 0, "stolen": 0, "dup_completed": 0, "rejected": 0,
+        }
         self.per_replica = [
-            {"submitted": 0, "admitted": 0, "stolen": 0, "completed": 0}
+            {"submitted": 0, "admitted": 0, "stolen": 0, "completed": 0,
+             "rejected": 0}
             for _ in range(n_replicas)
         ]
         # Per-replica rotating victim cursor: scanning victims from a fixed
@@ -272,32 +386,55 @@ class WorkStealingFrontend:
             self._victim_rr[replica] = (start + 1) % len(victims)
         return None
 
+    def run_iteration(self) -> bool:
+        """One round-robin pass over the replicas: fill free slots from the
+        queues (honoring each admit's verdict), then step every busy
+        batcher.  Returns True if anything happened — an admission, a
+        rejection, or a live engine step."""
+        worked = False
+        for rep, b in enumerate(self.batchers):
+            while b.n_live < b.B:
+                req = self._next_request(rep)
+                if req is None:
+                    break
+                # idempotent admission: a stolen duplicate re-runs prefill
+                ok = b.admit(Request(req.rid, req.tokens, req.max_new))
+                if not ok:
+                    cap = getattr(b, "cap", None)
+                    if cap is not None and not 0 < len(req.tokens) < cap:
+                        # permanent: the prompt can never fit this engine's
+                        # cache — surface it, don't retry
+                        with self._lock:
+                            if req.rid not in self.rejected:
+                                self.rejected[req.rid] = req
+                        self.counters["rejected"] += 1
+                        self.per_replica[rep]["rejected"] += 1
+                        worked = True
+                        continue
+                    # transient (no free slot despite the n_live check,
+                    # e.g. a racing admission): requeue and move on
+                    self.queues[rep].put(req)
+                    break
+                self.counters["admitted"] += 1
+                self.per_replica[rep]["admitted"] += 1
+                worked = True
+            if b.n_live:
+                for r in b.step():
+                    self.per_replica[rep]["completed"] += 1
+                    with self._lock:
+                        if r.rid in self.completed:
+                            self.counters["dup_completed"] += 1  # weak mult.
+                        else:
+                            self.completed[r.rid] = r
+                worked = True
+        return worked
+
     def run(self, max_iters: int = 10_000) -> Dict[int, Request]:
         """Drive all replicas round-robin until queues drain and slots empty."""
         for _ in range(max_iters):
-            worked = False
-            for rep, b in enumerate(self.batchers):
-                while b.n_live < b.B:
-                    req = self._next_request(rep)
-                    if req is None:
-                        break
-                    # idempotent admission: a stolen duplicate re-runs prefill
-                    b.admit(Request(req.rid, req.tokens, req.max_new))
-                    self.counters["admitted"] += 1
-                    self.per_replica[rep]["admitted"] += 1
-                    worked = True
-                if b.n_live:
-                    for r in b.step():
-                        self.per_replica[rep]["completed"] += 1
-                        with self._lock:
-                            if r.rid in self.completed:
-                                self.counters["dup_completed"] += 1  # weak mult.
-                            else:
-                                self.completed[r.rid] = r
-                    worked = True
             # an iteration with no admission and no live slot means every
             # queue answered EMPTY to take AND steal: fully drained.
-            if not worked:
+            if not self.run_iteration():
                 break
         return self.completed
 

@@ -19,6 +19,11 @@ the lockstep *tile-slot round*, exported 1 round = 1 µs:
 * **pid 2 "mesh devices"** — when the trace carries ``mesh_phases``
   (cross-device runs): per-device phase slices (local drain / steal) plus
   advisory and collective-bytes counters.
+* **pid 3 "ws task families"** — one thread track per task family
+  (resolved from EV_OP): the same extraction intervals re-grouped by
+  family, so a unified mixed-mode launch renders its decode / prefill /
+  expert / glue phases as parallel per-family timelines.  Slices only — no
+  extra counters or flows.
 
 Everything is derived from the plain-store event rings — the export adds
 zero cost to the traced run.
@@ -34,6 +39,7 @@ from .ring import (
     EV_COST,
     EV_KIND,
     EV_MULT,
+    EV_OP,
     EV_PROG,
     EV_QUEUE,
     EV_ROUND,
@@ -43,10 +49,12 @@ from .ring import (
     KIND_NAMES,
     KIND_TAKE,
 )
+from .trace import _family_name
 
 PID_PROGRAMS = 0
 PID_QUEUES = 1
 PID_MESH = 2
+PID_FAMILIES = 3
 
 
 def _meta(pid, name, tid=None, tname=None):
@@ -109,6 +117,29 @@ def to_perfetto(trace) -> dict:
         out += _meta(PID_QUEUES, "ws queues")
         for q in sorted(queue_anchor_tracks):
             out += _meta(PID_QUEUES, None, tid=q, tname=f"queue {q}")
+
+    # per-family timelines: the same extraction intervals keyed by EV_OP,
+    # one thread track per family.  "X" slices ONLY — the pid-0 tracks stay
+    # the canonical per-program view and keep all counters/flows.
+    events = np.asarray(trace.events)
+    if events.size:
+        family_ops = sorted(int(op) for op in np.unique(events[:, EV_OP]))
+        out += _meta(PID_FAMILIES, "ws task families")
+        for op in family_ops:
+            out += _meta(PID_FAMILIES, None, tid=op,
+                         tname=f"{_family_name(op)} (op {op})")
+        for ev in events:
+            op = int(ev[EV_OP])
+            out.append({
+                "ph": "X", "pid": PID_FAMILIES, "tid": op,
+                "ts": int(ev[EV_ROUND]), "dur": max(int(ev[EV_COST]), 1),
+                "name": f"{_family_name(op)} t{int(ev[EV_TID])}",
+                "cat": "family",
+                "args": {"program": int(ev[EV_PROG]),
+                         "queue": int(ev[EV_QUEUE]),
+                         "task": int(ev[EV_TID]),
+                         "multiplicity": int(ev[EV_MULT])},
+            })
 
     # remaining[q] advisory counters: initial load at ts 0, then one sample
     # after each claim at the claim's start round

@@ -31,6 +31,9 @@ EV_VICTIM  owner program of the stolen queue (steals where the queue has a
            same-numbered owner, i.e. ``queue < n_programs``); -1 for takes
            and for unowned queues (expert layouts with n_queues > P)
 EV_MULT    the task's multiplicity counter *after* this execution
+EV_OP      the claimed record's op id (``tasks.F_OP``) — identifies the task
+           family of the event, so a mixed-mode launch (unified engine step)
+           decodes into per-family timelines
 =========  ================================================================
 """
 
@@ -38,9 +41,9 @@ from __future__ import annotations
 
 import numpy as np
 
-EVENT_WIDTH = 9
+EVENT_WIDTH = 10
 (EV_ROUND, EV_PROG, EV_QUEUE, EV_SLOT, EV_TID, EV_COST, EV_KIND, EV_VICTIM,
- EV_MULT) = range(EVENT_WIDTH)
+ EV_MULT, EV_OP) = range(EVENT_WIDTH)
 
 KIND_TAKE = 0
 KIND_STEAL_SCAN = 1

@@ -21,6 +21,7 @@ import numpy as np
 from .ring import (
     EV_COST,
     EV_KIND,
+    EV_OP,
     EV_PROG,
     EV_QUEUE,
     EV_ROUND,
@@ -29,6 +30,17 @@ from .ring import (
     KIND_TAKE,
     decode_rings,
 )
+
+
+def _family_name(op: int) -> str:
+    """Resolve an EV_OP code to its task-family name via the registry;
+    falls back to the bare op code in bare (registry-less) environments."""
+    try:
+        from repro.pallas_ws.tasks import family_of
+
+        return family_of(int(op)).name
+    except Exception:
+        return f"op{int(op)}"
 
 
 @dataclass
@@ -121,6 +133,17 @@ class WSTrace:
             hist["unowned"] = unowned
         return hist
 
+    def family_counts(self) -> dict:
+        """Extractions per task family (via EV_OP) — in a unified mixed-mode
+        launch this shows all families flowing through ONE ring stream."""
+        out: dict = {}
+        if self.n_events:
+            ops, counts = np.unique(self.events[:, EV_OP], return_counts=True)
+            for op, n in zip(ops, counts):
+                name = _family_name(int(op))
+                out[name] = out.get(name, 0) + int(n)
+        return out
+
     def per_queue_drain(self) -> np.ndarray:
         """Claim events per queue, ``[n_queues]`` — how deep each queue was
         drained (duplicate claims of a rewound slot each count: this is
@@ -163,6 +186,7 @@ class WSTrace:
             "steals": self.n_steals,
             "steal_ratio": round(self.steal_ratio, 4),
             "utilization_mean": round(float(util.mean()), 4),
+            "families": self.family_counts(),
             "steal_locality": {str(k): v for k, v in self.steal_locality().items()},
             "tail_idle": idle["total_tail_idle"],
             "gap_idle": idle["total_gap_idle"],

@@ -1,0 +1,178 @@
+"""Unified mixed-mode engine step (models.unified): one `launch_ws_grid`
+launch carrying decode tiles, prefill flash tiles, expert tiles and the
+step-glue family, stage-gated by Graham windows.
+
+Parity oracle is the *jitted* split-launch path: `jit(decode_step_ws)` /
+`jit(prefill)`.  The unified launch is itself one jitted pallas program, so
+it reproduces the jit path bitwise on float32 configs; the eager split path
+differs from its own jit by ~1 ulp (XLA fusion rounding), which is exactly
+the residue the old split-vs-dense tests tolerate.
+"""
+
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import (
+    decode_step_ws,
+    decode_step_unified,
+    init_params,
+    prefill,
+    unified_step_supported,
+)
+from repro.models.transformer import init_params as _init  # noqa: F401
+from repro.wstrace.ring import EV_OP, decode_rings
+from repro.pallas_ws.tasks import (
+    OP_DECODE_TILE,
+    OP_EXPERT_TILE,
+    OP_FLASH_TILE,
+    OP_STEP_GLUE,
+)
+
+CAP = 32
+
+
+def _setup(arch, **kw):
+    cfg = get_config(arch, smoke=True)
+    if kw:
+        cfg = dc.replace(cfg, **kw)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.asarray(np.array([[5, 6, 7, 8], [9, 8, 7, 6]], np.int32))}
+    _, caches = prefill(params, cfg, batch, capacity=CAP)
+    tok = jnp.asarray(np.array([[3], [4]], np.int32))
+    pos = np.array([4, 2], np.int32)  # heterogeneous live lengths
+    return cfg, params, caches, tok, pos
+
+
+def _split_oracle(cfg, params, caches, tok, pos):
+    return jax.jit(lambda p, c, t, q: decode_step_ws(p, cfg, c, t, q))(
+        params, caches, tok, jnp.asarray(pos)
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode parity: bitwise vs the split-launch path
+
+
+def test_unified_dense_decode_bitwise():
+    cfg, params, caches, tok, pos = _setup("llama3.2-3b")
+    assert unified_step_supported(cfg)
+    l_ref, c_ref = _split_oracle(cfg, params, caches, tok, pos)
+    l_u, c_u, rep = decode_step_unified(params, cfg, caches, tok, pos)
+    np.testing.assert_array_equal(np.asarray(l_ref), np.asarray(l_u))
+    np.testing.assert_array_equal(np.asarray(c_ref.kv.k), np.asarray(c_u.kv.k))
+    np.testing.assert_array_equal(np.asarray(c_ref.kv.v), np.asarray(c_u.kv.v))
+    # drained: every task (glue + attention tiles) executed at least once
+    assert (np.asarray(rep.res.mult)[: rep.n_tasks] >= 1).all()
+
+
+def test_unified_moe_decode_bitwise():
+    """MoE config: the in-kernel router Put + pool expert tiles + combine
+    reproduce the split path's host Put + per-layer expert launch bitwise."""
+    cfg, params, caches, tok, pos = _setup("kimi-k2-1t-a32b", moe_dispatch="ws")
+    assert unified_step_supported(cfg)
+    l_ref, c_ref = _split_oracle(cfg, params, caches, tok, pos)
+    l_u, c_u, rep = decode_step_unified(params, cfg, caches, tok, pos)
+    np.testing.assert_array_equal(np.asarray(l_ref), np.asarray(l_u))
+    np.testing.assert_array_equal(np.asarray(c_ref.kv.k), np.asarray(c_u.kv.k))
+    np.testing.assert_array_equal(np.asarray(c_ref.kv.v), np.asarray(c_u.kv.v))
+
+
+# ---------------------------------------------------------------------------
+# folded-in prefill
+
+
+def test_unified_prefill_fold():
+    """Folding a prompt's prefill into the decode launch (a) leaves the
+    decode half bitwise unchanged and (b) reproduces `jit(prefill)` — logits
+    to float tolerance (the flash tiles reduce kv in bk-block online-softmax
+    order, `flash_ref` in whole chunks), layer-0 k/v caches bitwise
+    (projection + rope, no reduction upstream) and deeper layers to
+    tolerance (they inherit the attention rounding via the residual)."""
+    cfg, params, caches, tok, pos = _setup("llama3.2-3b")
+    ptok = jnp.asarray(
+        np.arange(11, 31, dtype=np.int32).reshape(1, 20)  # Lp=20, ragged tiles
+    )
+    l_ref, c_ref = _split_oracle(cfg, params, caches, tok, pos)
+    l_u, c_u, rep = decode_step_unified(
+        params, cfg, caches, tok, pos, prefill_tokens=ptok, bq=8, bk=8
+    )
+    np.testing.assert_array_equal(np.asarray(l_ref), np.asarray(l_u))
+    np.testing.assert_array_equal(np.asarray(c_ref.kv.k), np.asarray(c_u.kv.k))
+
+    lp_ref, cp_ref = jax.jit(lambda p, b: prefill(p, cfg, b, capacity=CAP))(
+        params, {"tokens": ptok}
+    )
+    np.testing.assert_allclose(
+        np.asarray(rep.prefill_logits), np.asarray(lp_ref), rtol=2e-5, atol=2e-5
+    )
+    np.testing.assert_array_equal(
+        np.asarray(rep.prefill_kv.k[0]), np.asarray(cp_ref.kv.k[0])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(rep.prefill_kv.v[0]), np.asarray(cp_ref.kv.v[0])
+    )
+    np.testing.assert_allclose(
+        np.asarray(rep.prefill_kv.k), np.asarray(cp_ref.kv.k),
+        rtol=2e-5, atol=2e-5,
+    )
+    np.testing.assert_allclose(
+        np.asarray(rep.prefill_kv.v), np.asarray(cp_ref.kv.v),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the launch-count witness: ONE ring stream carrying every family
+
+
+def test_unified_single_launch_all_families():
+    cfg, params, caches, tok, pos = _setup("kimi-k2-1t-a32b", moe_dispatch="ws")
+    ptok = jnp.asarray(np.array([[11, 12, 13, 14, 15, 16, 17]], np.int32))
+    _, _, rep = decode_step_unified(
+        params, cfg, caches, tok, pos, prefill_tokens=ptok, trace=True
+    )
+    stream, dropped = decode_rings(
+        np.asarray(rep.res.events), np.asarray(rep.res.ev_cursor)
+    )
+    # fresh stage-gated launch: every task claimed exactly once, nothing lost
+    assert len(stream) == rep.n_tasks
+    assert int(dropped.sum()) == 0
+    assert (np.asarray(rep.res.mult)[: rep.n_tasks] == 1).all()
+    ops = set(stream[:, EV_OP].tolist())
+    # one event stream, all three task families (+ glue) — the single-launch
+    # witness the acceptance criteria ask for
+    assert {OP_DECODE_TILE, OP_FLASH_TILE, OP_EXPERT_TILE, OP_STEP_GLUE} <= ops
+
+
+def test_unified_trace_off_matches_trace_on():
+    cfg, params, caches, tok, pos = _setup("llama3.2-3b")
+    l0, c0, _ = decode_step_unified(params, cfg, caches, tok, pos, trace=False)
+    l1, c1, _ = decode_step_unified(params, cfg, caches, tok, pos, trace=True)
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+    np.testing.assert_array_equal(np.asarray(c0.kv.k), np.asarray(c1.kv.k))
+
+
+# ---------------------------------------------------------------------------
+# gate
+
+
+def test_unified_step_supported_gate():
+    cfg = get_config("llama3.2-3b", smoke=True)
+    assert unified_step_supported(cfg)
+    assert not unified_step_supported(dc.replace(cfg, dtype="bfloat16"))
+    assert not unified_step_supported(dc.replace(cfg, family="ssm"))
+    kimi = get_config("kimi-k2-1t-a32b", smoke=True)
+    assert not unified_step_supported(kimi)  # dense dispatch: no WS oracle
+    assert unified_step_supported(dc.replace(kimi, moe_dispatch="ws"))
+
+
+def test_unified_rejects_unsupported():
+    cfg, params, caches, tok, pos = _setup("llama3.2-3b")
+    bad = dc.replace(cfg, dtype="bfloat16")
+    with pytest.raises(AssertionError):
+        decode_step_unified(params, bad, caches, tok, pos)
