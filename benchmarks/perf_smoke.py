@@ -28,7 +28,12 @@ that builds BENCH.json, and compares against the committed BENCH.json
   oracle with no lost or duplicated request — absolute gates;
 * a ``trace=False`` replay of the headline ragged/moe cells must reproduce
   the committed (traced) makespans **exactly** — event tracing must be free
-  when off (ISSUE 7; the trace=False lowering is the pre-trace kernel).
+  when off (ISSUE 7; the trace=False lowering is the pre-trace kernel);
+* the chaos storm matrix (ISSUE 9; seeded fault plans, deterministic) must
+  stay checker-clean with real multiplicity exercised, ``fault_plan=None``
+  must remain bit-identical to the fault-free lowering, and the serving
+  crash/watchdog cells must keep exactly-once completion and stream
+  parity — all absolute gates.
 
 Exit 1 on any violation (or if a bench's own headline claim already
 failed).  Tolerance defaults to 10% — tight enough to catch a real
@@ -64,7 +69,7 @@ def compare(fresh: dict, committed: dict, tol: float) -> list:
     # summary (bench not run, dryrun file absent) is a failure, never a
     # silent skip, or the gate would pass vacuously
     for section in ("ragged_attention", "moe_dispatch", "steal_policy",
-                    "mesh_dispatch", "serving"):
+                    "mesh_dispatch", "serving", "chaos"):
         if committed.get(section) and not fresh.get(section):
             errs.append(f"{section}: committed reference exists but the "
                         "fresh dry-run summary is missing — bench not run?")
@@ -165,6 +170,32 @@ def compare(fresh: dict, committed: dict, tol: float) -> list:
         _check(errs, f"{tag} slot utilization",
                n["slot_utilization"] >= o["slot_utilization"] * lo,
                f"{n['slot_utilization']} < {o['slot_utilization']} * {lo}")
+    c_new, c_old = fresh.get("chaos"), committed.get("chaos")
+    if c_new and c_old:
+        # all absolute gates: the fault plans and traffic are seeded and the
+        # decode greedy, so every column is deterministic — any drift is a
+        # safety regression, not noise
+        _check(errs, "chaos checker", c_new["checker_clean"],
+               "a fault-injected scheduler cell violated the relaxed-"
+               "semantics checker (lost task / double claim / mult bound)")
+        _check(errs, "chaos storm coverage",
+               c_new["max_mult"] >= max(2, c_old["max_mult"]),
+               f"max multiplicity {c_new['max_mult']} < committed "
+               f"{c_old['max_mult']} — the storm matrix stopped exercising "
+               "real duplication")
+        _check(errs, "chaos fault-off parity", c_new["fault_off_parity"],
+               "fault_plan=None is no longer bit-identical to the omitted "
+               "kwarg — chaos injection leaks into the fault-free lowering")
+        _check(errs, "chaos replica crash",
+               c_new["replica_crash"]["ok"]
+               and c_new["replica_crash"]["streams_match"],
+               f"{c_new['replica_crash']} — crash re-admission lost, "
+               "duplicated, or diverged a stream")
+        _check(errs, "chaos watchdog", c_new["watchdog"]["ok"],
+               f"{c_new['watchdog']} — split fallback diverged from the "
+               "clean unified streams")
+        _check(errs, "chaos all cells", c_new["all_ok"],
+               "at least one chaos cell failed its own gate")
     return errs
 
 
@@ -211,6 +242,7 @@ def main(argv=None):
     status = 0
     if not args.no_run:
         from benchmarks import (
+            chaos_storm,
             mesh_dispatch,
             moe_dispatch,
             ragged_attention,
@@ -224,6 +256,7 @@ def main(argv=None):
         status |= steal_policy.main(["--dry-run"])
         status |= mesh_dispatch.main(["--dry-run"])  # re-execs on 8 devices
         status |= serving_traffic.main(["--dry-run"])
+        status |= chaos_storm.main(["--dry-run"])
 
     if not BENCH_JSON.exists():
         print(f"[perf-smoke] {BENCH_JSON} missing — commit the trajectory first")

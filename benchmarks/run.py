@@ -14,6 +14,9 @@ Sections:
                    sharding on 8 forced host devices (§7)
   [serving]        replayed arrival traffic through the WS frontend —
                    unified one-launch engine step vs split-launch (§5)
+  [chaos]          seeded fault storms (stalls, advisory corruption,
+                   kill+rewind) through the relaxed-semantics SafetyChecker,
+                   plus serving crash re-admission + watchdog parity
   [loader]         L2 host pipeline — work-stealing loader throughput
   [roofline]       dry-run roofline table (if results/dryrun.jsonl exists)
 
@@ -134,6 +137,31 @@ def summarize(quick: bool) -> dict:
             )
             for r in serving["rows"]
         ]
+    chaos = _load("BENCH_chaos", quick)
+    if chaos:
+        # everything here is deterministic (seeded plans, seeded traffic,
+        # greedy decode) — perf_smoke gates these columns exactly
+        sched = [r for r in chaos["rows"] if r["section"] == "scheduler"]
+        cells = {r["cell"]: r for r in chaos["rows"] if "cell" in r}
+        out["chaos"] = dict(
+            all_ok=chaos["all_ok"],
+            scheduler_cells=len(sched),
+            checker_clean=all(r["checker_ok"] for r in sched),
+            max_mult=max((r["max_mult"] for r in sched), default=0),
+            fault_off_parity=cells["fault_off_parity"]["ok"],
+            replica_crash=dict(
+                ok=cells["replica_crash"]["ok"],
+                exactly_once=cells["replica_crash"]["exactly_once"],
+                streams_match=cells["replica_crash"]["streams_match"],
+                readmitted=cells["replica_crash"]["readmitted"],
+                crashed=cells["replica_crash"]["crashed"],
+            ),
+            watchdog=dict(
+                ok=cells["watchdog"]["ok"],
+                streams_match=cells["watchdog"]["streams_match"],
+                degradations=cells["watchdog"]["degradation_counts"],
+            ),
+        )
     policy = _load("BENCH_policy", quick)
     if policy:
         out["steal_policy"] = [
@@ -175,7 +203,7 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--sections",
-        default="zero-cost,spanning-tree,scheduler,ragged,moe,policy,mesh,serving,loader,roofline",
+        default="zero-cost,spanning-tree,scheduler,ragged,moe,policy,mesh,serving,chaos,loader,roofline",
     )
     args = ap.parse_args(argv)
     sections = set(args.sections.split(","))
@@ -241,7 +269,16 @@ def main(argv=None):
         # step's token streams diverge from the split-launch oracle
         status |= serving_traffic.main(["--dry-run"] if args.quick else [])
 
-    if any(s in sections for s in ("ragged", "moe", "policy", "mesh", "serving")):
+    if "chaos" in sections:
+        print("\n== [chaos] seeded fault storms through the SafetyChecker ==")
+        from . import chaos_storm
+
+        # nonzero when any cell fails the checker (lost task, multiplicity
+        # bound, double claim), output parity, the fault-off bitwise gate,
+        # or serving exactly-once / stream parity under crash + watchdog
+        status |= chaos_storm.main(["--dry-run"] if args.quick else [])
+
+    if any(s in sections for s in ("ragged", "moe", "policy", "mesh", "serving", "chaos")):
         compose_bench_json(quick=args.quick)
 
     if "loader" in sections:

@@ -260,24 +260,32 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
     wu = rng.randn(n_experts, d, f).astype(np.float32)
     wd = rng.randn(n_experts, f, d).astype(np.float32)
 
-    # (experiment label, steal, steal_policy, layout, trace) — the traced-on
-    # cases audit the ISSUE-7 event rings: the per-extraction record stores
-    # and the plain-write cursor bump must lower to the same plain tensor
-    # ops as the queue protocol they instrument
+    from repro.chaos import FaultPlan
+
+    # (experiment label, steal, steal_policy, layout, trace, fault_plan) —
+    # the traced-on cases audit the ISSUE-7 event rings: the per-extraction
+    # record stores and the plain-write cursor bump must lower to the same
+    # plain tensor ops as the queue protocol they instrument.  The faulted
+    # case audits the ISSUE-9 chaos injection: stalls are initial clock
+    # values and advisory corruption is plain data, so a fault-injected
+    # lowering must meet the identical zero-synchronization bar.
+    _faulted = FaultPlan(stalls=(2, 0, 1, 0), advisory="random")
     cases = (
-        ("put-take", False, "cost", "padded", False),
-        ("put-steal", True, "scan", "padded", False),
-        ("put-steal", True, "cost", "padded", False),
-        ("put-steal", True, "cost", "pool", False),
-        ("put-take-traced", False, "cost", "padded", True),
-        ("put-steal-traced", True, "cost", "padded", True),
+        ("put-take", False, "cost", "padded", False, None),
+        ("put-steal", True, "scan", "padded", False, None),
+        ("put-steal", True, "cost", "padded", False, None),
+        ("put-steal", True, "cost", "pool", False, None),
+        ("put-take-traced", False, "cost", "padded", True, None),
+        ("put-steal-traced", True, "cost", "padded", True, None),
+        ("put-steal-faulted", True, "cost", "padded", True, _faulted),
     )
     rows = []
-    for exp, steal, policy, layout, trace in cases:
+    for exp, steal, policy, layout, trace, fault in cases:
         n_queues = n_experts if steal else n_programs
 
         def pipeline(idx, gates, x, wg, wu, wd, steal=steal, policy=policy,
-                     layout=layout, n_queues=n_queues, trace=trace):
+                     layout=layout, n_queues=n_queues, trace=trace,
+                     fault=fault):
             rounds = expert_rounds_bound(
                 n_tokens * top_k, bt, n_queues, n_programs, steal
             )
@@ -301,6 +309,7 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
             res = run_moe_schedule(
                 state, x, routed.tok_idx, wg, wu, wd, bt=bt, steal=steal,
                 steal_policy=policy, rounds=rounds, trace=trace,
+                fault_plan=fault,
             )
             outs = (res.out, res.mult, res.head, res.taken, res.remaining)
             if trace:  # keep the rings live so their stores aren't DCE'd
@@ -311,7 +320,8 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
             jnp.asarray(idx), jnp.asarray(gates), jnp.asarray(x),
             jnp.asarray(wg), jnp.asarray(wu), jnp.asarray(wd),
         ).as_text()
-        tag = f"{policy},{layout}" + (",trace" if trace else "")
+        tag = (f"{policy},{layout}" + (",trace" if trace else "")
+               + (",faulted" if fault is not None else ""))
         rows.append(_fence_free_lowering_row(
             text, f"traced Put lowering [{tag}]", exp,
             f"moe-ws-traced[{tag}]", n_tokens * top_k,
@@ -367,7 +377,7 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
         "[zero-cost] traced-put audit OK: moe-ws-traced jit lowering has "
         "0 RMW / 0 locks / 0 fences on put-take and put-steal "
         "(scan + cost policies, padded + pool layouts, event tracing "
-        "off AND on), on the "
+        "off AND on, fault injection on), on the "
         "custom-VJP backward (grad-dense + grad-ws) and on the "
         f"shard_map mesh dispatch (D={n_dev})"
     )

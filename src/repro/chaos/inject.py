@@ -1,0 +1,128 @@
+"""Segmented fault-injection driver for the fence-free megakernel.
+
+A :class:`repro.chaos.plan.FaultPlan` names a deterministic sequence of
+launch *segments*:
+
+    [kill × len(plan.kills)]  [storm × plan.storms]  [final]
+
+* the first segment starts from the pristine queue state with the plan's
+  launch faults applied (program stalls via the initial clock vector,
+  advisory corruption via ``remaining``);
+* a **kill** segment runs with a deliberately under-provisioned round
+  budget — the launch dies mid-schedule; the next segment resumes from the
+  surviving shared arrays (head / local bounds / announcements / advisory),
+  exactly the state a relaunch after a preempted kernel would see;
+* a **storm** segment first applies a head-rewind storm (stale ``head``
+  republishes + wiped ``local_head`` rows, clamped to legally-stale values
+  ≤ the current head) and then relaunches with a full round budget;
+* the **final** segment always runs with the full Graham budget from a
+  fresh clock, so every surviving task drains.
+
+Each segment records its start snapshot (head, local bounds) and its
+decoded trace stream; :mod:`repro.chaos.checker` replays the paper's §7
+contract over those records.  Outputs and multiplicity counters are
+carried across segments (``out=``/``mult=`` relaunch kwargs), so the final
+``out`` is the duplicated accumulation that multiplicity normalization
+must recover the fault-free answer from.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.chaos.plan import FaultPlan, RewindSpec, apply_rewind, resume_state
+
+
+@dataclass
+class Segment:
+    """One launch segment plus the snapshot the checker needs."""
+
+    kind: str                 # "initial" | "kill" | "storm" | "final"
+    budget: int               # rounds provisioned for this launch
+    start_head: np.ndarray    # [n_queues] head at segment start (post-fault)
+    start_local: np.ndarray   # [n_programs, n_queues] local bounds at start
+    stream: np.ndarray        # decoded (round, prog)-sorted events [n, 10]
+    dropped: int              # ring-overflow drops in this segment
+    res: object               # the raw WSRunResult
+
+
+@dataclass
+class ChaosRunResult:
+    plan: FaultPlan
+    segments: List[Segment]
+    rounds_full: int
+    tails: Optional[np.ndarray] = None  # [n_queues] static queue tails
+
+    @property
+    def res(self):
+        """The final segment's WSRunResult (carried out / mult / arrays)."""
+        return self.segments[-1].res
+
+    @property
+    def mult(self) -> np.ndarray:
+        return np.asarray(self.res.mult)
+
+    @property
+    def dropped(self) -> int:
+        return sum(s.dropped for s in self.segments)
+
+
+def _clamped(spec: RewindSpec, head: np.ndarray) -> RewindSpec:
+    """Storm targets are drawn at plan time against the queue *capacity*;
+    clamp them to the live head so every republish is a legally-stale
+    value (a plain write can only resurface something head once held)."""
+    tgts = {q: min(t, int(head[q])) for q, t in spec.head_targets.items()}
+    return dataclasses.replace(spec, head_targets=tgts)
+
+
+def run_with_faults(state, launch: Callable, plan: Optional[FaultPlan], *,
+                    rounds: int) -> ChaosRunResult:
+    """Drive ``launch`` through the plan's segment sequence.
+
+    ``launch(state, *, rounds, out, mult, fault_plan)`` must run the
+    schedule with ``trace=True`` and return a ``WSRunResult`` (see
+    tests/test_chaos.py for the one-line wrappers around
+    ``run_moe_schedule`` / ``run_ws_schedule``).  ``rounds`` is the
+    fault-free Graham budget; segment 0 gets ``plan.max_stall`` extra
+    rounds so stalled programs still meet the bound.
+    """
+    from repro.wstrace.ring import decode_rings
+
+    plan = plan if plan is not None else FaultPlan()
+    specs = plan.storm_specs(state)
+
+    # (kind, budget, rewind-spec-or-None); the final segment always runs
+    # the full budget so the schedule is guaranteed to drain
+    seq = [("kill", int(k), None) for k in plan.kills]
+    seq += [("storm", rounds, s) for s in specs]
+    seq += [("final", rounds, None)]
+
+    segments: List[Segment] = []
+    out = mult = None
+    for i, (kind, budget, spec) in enumerate(seq):
+        if i > 0:
+            resume_state(state, segments[-1].res)
+        if spec is not None:
+            apply_rewind(state, _clamped(spec, np.asarray(state.head)))
+        seg_plan = plan if i == 0 else None
+        if i == 0:
+            budget += plan.max_stall
+        start_head = np.array(state.head)
+        start_local = np.array(state.local_head)
+        res = launch(state, rounds=budget, out=out, mult=mult,
+                     fault_plan=seg_plan)
+        stream, dropped = decode_rings(np.asarray(res.events),
+                                       np.asarray(res.ev_cursor))
+        segments.append(Segment(kind=kind, budget=budget,
+                                start_head=start_head,
+                                start_local=start_local,
+                                stream=stream,
+                                dropped=int(np.sum(dropped)), res=res))
+        out, mult = res.out, res.mult
+
+    return ChaosRunResult(plan=plan, segments=segments, rounds_full=rounds,
+                          tails=np.array(state.tail))

@@ -209,6 +209,7 @@ def run_moe_schedule(
     interpret: bool = True,
     trace: bool = False,
     trace_capacity: Optional[int] = None,
+    fault_plan=None,
 ) -> WSRunResult:
     """Launch the expert megakernel over a prepared :class:`QueueState`.
 
@@ -226,5 +227,5 @@ def run_moe_schedule(
         state, execute, (tok_idx, x, wg, wu, wd), out,
         steal=steal, steal_policy=steal_policy, rounds=rounds, mult=mult,
         compress_runs=compress_runs, interpret=interpret, trace=trace,
-        trace_capacity=trace_capacity,
+        trace_capacity=trace_capacity, fault_plan=fault_plan,
     )

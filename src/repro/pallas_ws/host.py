@@ -53,10 +53,20 @@ class PallasWSHost:
     OWNER = 0
 
     def __init__(self, backend=None, capacity: int = 4096,
-                 trace: bool = False, **_ignored: Any):
+                 trace: bool = False, fault_plan=None, **_ignored: Any):
         backend = backend if backend is not None else ThreadBackend()
         self.backend = backend
         self.capacity = capacity
+        # chaos shim faults (repro.chaos.FaultPlan): drop every n-th
+        # advisory update (a lost plain write) and/or republish the
+        # pre-claim head after every n-th claim (a §7 stale write racing
+        # the claim).  Both are legal relaxed-memory behaviors the
+        # protocol must absorb; counts land in ``faults_injected``.
+        self.fault_plan = fault_plan
+        self._advise_n = 0
+        self._claim_n = 0
+        self.faults_injected = {"dropped_advisories": 0,
+                                "stale_republishes": 0}
         # Device mirror: tasks[s] (⊥-initialized suffix), head, taken row,
         # advisory remaining-cost summary.
         self.tasks = backend.array(capacity, init=BOTTOM)
@@ -89,7 +99,25 @@ class PallasWSHost:
     def _advise(self, delta: int, pid: int) -> None:
         # best-effort advisory update: plain read + plain write (no CAS) —
         # a lost update mis-ranks victims, never changes extraction
+        self._advise_n += 1
+        fp = self.fault_plan
+        if (fp is not None and fp.drop_advisory_every
+                and self._advise_n % fp.drop_advisory_every == 0):
+            self.faults_injected["dropped_advisories"] += 1
+            return
         self.remaining.write(max(0, self.remaining.read(pid) + delta), pid)
+
+    def _maybe_stale_republish(self, head: int, pid: int) -> None:
+        # after a successful claim wrote head+1, resurface the pre-claim
+        # value — exactly what a delayed plain write from a slower racer
+        # could legally do; the claimed slot becomes stealable again and
+        # the multiplicity bound (not prevention) must absorb it
+        self._claim_n += 1
+        fp = self.fault_plan
+        if (fp is not None and fp.stale_head_every
+                and self._claim_n % fp.stale_head_every == 0):
+            self.Head.write(head, pid)
+            self.faults_injected["stale_republishes"] += 1
 
     # -- owner ----------------------------------------------------------
     def put(self, x: Any) -> bool:
@@ -116,6 +144,7 @@ class PallasWSHost:
             self.taken.write((pid, head), pid, pid)
             self._advise(-_cost_of(x), pid)
             self._record(pid, head, x, "take")
+            self._maybe_stale_republish(head, pid)
             return x
         self._local[pid] = head
         return EMPTY
@@ -132,6 +161,7 @@ class PallasWSHost:
             self.taken.write((pid, head), pid, pid)
             self._advise(-_cost_of(x), pid)
             self._record(pid, head, x, "steal")
+            self._maybe_stale_republish(head, pid)
             return x
         self._local[pid] = head
         return EMPTY

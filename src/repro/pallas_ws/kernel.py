@@ -591,6 +591,7 @@ def launch_ws_grid(
     trace: bool = False,
     trace_capacity: Optional[int] = None,
     trace_remote: bool = False,
+    fault_plan=None,
 ) -> WSRunResult:
     """Run the persistent WS grid with a family ``execute`` body.
 
@@ -624,6 +625,17 @@ def launch_ws_grid(
     ``steal-remote`` (mesh_ws stolen-segment launches).  ``trace=False``
     (the default) adds no refs and no kernel code: the lowering is
     bit-identical to the untraced build.
+
+    ``fault_plan`` (a :class:`repro.chaos.FaultPlan`, optional) injects
+    the plan's *launch-time* faults as initial array values only: program
+    stalls become nonzero initial ``clock`` entries (a stalled program is
+    "busy" until its stall round and extracts nothing before then) and
+    advisory corruption replaces the initial ``remaining`` summaries.  No
+    kernel code changes — ``fault_plan=None`` is the identical lowering,
+    the same zero-cost bar as ``trace=False``.  When ``rounds`` is not
+    given, the Graham default is extended by the maximum stall so stalled
+    schedules still drain.  Cross-launch faults (storms, kills) live in
+    :func:`repro.chaos.inject.run_with_faults`.
     """
     assert steal_policy in STEAL_POLICIES, steal_policy
     P = state.n_programs
@@ -635,6 +647,7 @@ def launch_ws_grid(
                          "(compress_runs=False)")
     multi_out = isinstance(out, (tuple, list))
     outs_in = tuple(out) if multi_out else (out,)
+    rounds_given = rounds is not None
     rounds = (
         default_rounds(state, steal, compress_runs=compress)
         if rounds is None else rounds
@@ -645,6 +658,16 @@ def launch_ws_grid(
     remaining = state.remaining
     if remaining is None:
         remaining = queue_costs(state)
+    clock0 = jnp.zeros((P,), jnp.int32)
+    if fault_plan is not None:
+        # chaos injection is pure data: a stalled program is a nonzero
+        # initial clock, a stale advisory is a different initial value —
+        # the lowering is the fault_plan=None build either way
+        remaining = fault_plan.launch_remaining(remaining)
+        if fault_plan.max_stall:
+            clock0 = jnp.asarray(fault_plan.stall_vector(P), jnp.int32)
+            if not rounds_given:
+                rounds += fault_plan.max_stall
     if trace_capacity is None:
         trace_capacity = state.capacity if compress else rounds
     steal_kind = (
@@ -678,7 +701,7 @@ def launch_ws_grid(
         jnp.asarray(state.local_head),
         jnp.asarray(state.taken),
         jnp.asarray(remaining, dtype=jnp.int32),
-        jnp.zeros((P,), jnp.int32),   # clock
+        clock0,                       # clock (stall faults start nonzero)
         jnp.zeros((P,), jnp.int32),   # work
         jnp.zeros((P,), jnp.int32),   # steals
         jnp.zeros((P,), jnp.int32),   # scanned
@@ -820,6 +843,7 @@ def run_ws_schedule(
     interpret: bool = True,
     trace: bool = False,
     trace_capacity: Optional[int] = None,
+    fault_plan=None,
 ) -> WSRunResult:
     """Launch the attention megakernel over a prepared :class:`QueueState`.
 
@@ -842,5 +866,5 @@ def run_ws_schedule(
         state, execute, (q, k, v), out,
         steal=steal, steal_policy=steal_policy, rounds=rounds, mult=mult,
         compress_runs=compress_runs, interpret=interpret,
-        trace=trace, trace_capacity=trace_capacity,
+        trace=trace, trace_capacity=trace_capacity, fault_plan=fault_plan,
     )

@@ -246,6 +246,28 @@ def make_staged_queue_state(
     return state, stage_open, max(1, opens[-1])
 
 
+def copy_state(state: QueueState) -> QueueState:
+    """Independent copy of a host-built queue state (numpy arrays copied,
+    task_list shared — tasks are immutable records).  Fault-injection
+    drills mutate head/local bounds/advisories in place; the fault-free
+    oracle must run from a pristine copy."""
+
+    def cp(a):
+        return None if a is None else np.array(a)
+
+    return QueueState(
+        tasks=cp(state.tasks),
+        head=cp(state.head),
+        tail=cp(state.tail),
+        local_head=cp(state.local_head),
+        taken=cp(state.taken),
+        task_list=state.task_list,
+        n_tasks_hint=state.n_tasks_hint,
+        remaining=cp(state.remaining),
+        pool_off=cp(state.pool_off),
+    )
+
+
 def queue_costs(state: QueueState) -> np.ndarray:
     """Total tile-slot cost enqueued per queue (the static-schedule load)."""
     from .tasks import F_COST, F_OP

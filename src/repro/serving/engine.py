@@ -98,6 +98,9 @@ class ContinuousBatcher:
         use_ws: bool = True,
         jit_ws: bool = False,
         unified_step: bool = False,
+        step_deadline_s: Optional[float] = None,
+        watchdog_cooldown: int = 1,
+        fault_plan=None,
     ):
         self.params, self.cfg = params, cfg
         self.B, self.cap = slots, capacity
@@ -147,6 +150,18 @@ class ContinuousBatcher:
         # per-step serving telemetry (latency percentiles, slot utilization,
         # admissions) — read it back via stats()
         self.metrics = SchedulerMetrics(slots=slots)
+        # Watchdog (unified mode): a step whose logits come back non-finite
+        # is discarded and redone on the split path this very step; a step
+        # that blows `step_deadline_s` routes the next `watchdog_cooldown`
+        # steps through the split path.  `fault_plan` (a
+        # repro.chaos.EngineFaultPlan) injects poisoned logits / inflated
+        # latencies at chosen steps so both trips are drillable.
+        self.step_deadline_s = step_deadline_s
+        self.watchdog_cooldown = int(watchdog_cooldown)
+        self.fault_plan = fault_plan
+        self.degradations: List[dict] = []
+        self._step_idx = 0
+        self._degraded_until = -1
 
     # -- sampling --------------------------------------------------------------
     def _select(self, logits) -> np.ndarray:
@@ -240,13 +255,51 @@ class ContinuousBatcher:
             self.metrics.record_completion(len(done))
         return done
 
+    def _degrade(self, step_idx: int, kind: str, detail: str) -> None:
+        self.degradations.append(dict(step=step_idx, kind=kind, detail=detail))
+        self.metrics.record_degradation(kind)
+
     def _step_unified(self) -> List[Request]:
         """One engine step = ONE mixed-mode megakernel launch: all live
         slots' decode tiles plus (at most) one pending admission's prefill
-        tiles, stage-gated in a single `launch_ws_grid` grid."""
+        tiles, stage-gated in a single `launch_ws_grid` grid.
+
+        A per-step watchdog guards the launch: non-finite logits discard
+        the unified result and redo the step on the split path (standalone
+        prefill + per-step decode — graceful degradation, not a crash);
+        blowing ``step_deadline_s`` routes the following
+        ``watchdog_cooldown`` steps through the split path directly."""
         fold = self._pending.popleft() if self._pending else None
         n_live = self.n_live
         t0 = time.perf_counter()
+        step_idx = self._step_idx
+        self._step_idx += 1
+        done = None
+        if step_idx >= self._degraded_until:
+            done = self._try_unified(fold, step_idx)
+        if done is None:
+            done = self._step_split_fallback(fold)
+        elapsed = time.perf_counter() - t0
+        observed = elapsed
+        if self.fault_plan is not None and self.fault_plan.slows(step_idx):
+            observed += self.fault_plan.added_latency_s
+        if (self.step_deadline_s is not None
+                and observed > self.step_deadline_s
+                and step_idx >= self._degraded_until):
+            self._degrade(step_idx, "deadline",
+                          f"step took {observed:.4f}s > "
+                          f"{self.step_deadline_s:.4f}s; next "
+                          f"{self.watchdog_cooldown} step(s) on split path")
+            self._degraded_until = step_idx + 1 + self.watchdog_cooldown
+        self.metrics.record_step(elapsed, n_live)
+        if done:
+            self.metrics.record_completion(len(done))
+        return done
+
+    def _try_unified(self, fold, step_idx: int) -> Optional[List[Request]]:
+        """The unified launch + bookkeeping; returns None (nothing
+        committed — caches untouched, no token appended) when the watchdog
+        rejects the launch's logits."""
         tokens = np.zeros((self.B, 1), dtype=np.int32)
         for i, r in enumerate(self.live):
             if r is not None and r.out:
@@ -255,20 +308,30 @@ class ContinuousBatcher:
             jnp.asarray(fold[1].tokens, jnp.int32)[None, :]
             if fold is not None else None
         )
-        logits, self.caches, rep = decode_step_unified(
+        logits, caches, rep = decode_step_unified(
             self.params, self.cfg, self.caches, jnp.asarray(tokens), self.pos,
             prefill_tokens=ptok,
         )
+        lg = np.asarray(logits)  # syncs the device step
+        plg = np.asarray(rep.prefill_logits) if fold is not None else None
+        if self.fault_plan is not None and self.fault_plan.poisons(step_idx):
+            lg = np.full_like(lg, np.nan)
+        if not np.isfinite(lg).all() or (
+                plg is not None and not np.isfinite(plg).all()):
+            self._degrade(step_idx, "non-finite",
+                          "unified logits non-finite; redoing the step on "
+                          "the split path")
+            return None
+        self.caches = caches
         done = []
-        nxt = self._select(np.asarray(logits))  # syncs the device step
-        self.metrics.record_step(time.perf_counter() - t0, n_live)
+        nxt = self._select(lg)
         folded_slot = -1
         if fold is not None:
             slot, req = fold
             self._pending_slots.discard(slot)
             folded_slot = slot
             self._splice_slot(slot, Caches(kv=rep.prefill_kv))
-            first = int(self._select(np.asarray(rep.prefill_logits))[0])
+            first = int(self._select(plg)[0])
             req.out.append(first)
             self.pos[slot] = len(req.tokens)
             self.budget[slot] = req.max_new - 1
@@ -286,8 +349,52 @@ class ContinuousBatcher:
             if self.budget[i] <= 0 or self.pos[i] >= self.cap - 1:
                 done.append(r)
                 self.live[i] = None
-        if done:
-            self.metrics.record_completion(len(done))
+        return done
+
+    def _step_split_fallback(self, fold) -> List[Request]:
+        """Graceful degradation for one unified step: the same admission +
+        decode work done as split launches (standalone prefill, per-step
+        decode).  Greedy decode is deterministic, so the tokens this path
+        produces are exactly what the healthy unified launch would have
+        produced (PR 8's bitwise split/unified parity)."""
+        done = []
+        folded_slot = -1
+        if fold is not None:
+            slot, req = fold
+            self._pending_slots.discard(slot)
+            folded_slot = slot
+            batch = {"tokens": jnp.asarray(req.tokens, jnp.int32)[None, :]}
+            logits1, c1 = self._prefill(self.params, batch)
+            self._splice_slot(slot, c1)
+            first = int(self._select(np.asarray(logits1[:1]))[0])
+            req.out.append(first)
+            self.pos[slot] = len(req.tokens)
+            self.budget[slot] = req.max_new - 1
+            if self.budget[slot] <= 0 or self.pos[slot] >= self.cap - 1:
+                done.append(req)
+                self.live[slot] = None
+        decodable = [
+            i for i, r in enumerate(self.live)
+            if r is not None and r.out
+            and i not in self._pending_slots and i != folded_slot
+        ]
+        if decodable:
+            tokens = np.zeros((self.B, 1), dtype=np.int32)
+            for i in decodable:
+                tokens[i, 0] = self.live[i].out[-1]
+            logits, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(tokens),
+                jnp.asarray(self.pos)
+            )
+            nxt = self._select(np.asarray(logits))
+            for i in decodable:
+                r = self.live[i]
+                r.out.append(int(nxt[i]))
+                self.pos[i] += 1
+                self.budget[i] -= 1
+                if self.budget[i] <= 0 or self.pos[i] >= self.cap - 1:
+                    done.append(r)
+                    self.live[i] = None
         return done
 
     def stats(self) -> dict:
@@ -337,7 +444,8 @@ def ragged_slot_attention(q, k_cache, v_cache, batcher_or_lengths, *, schedule=N
 class WorkStealingFrontend:
     """N engine replicas fed by WS-WMULT queues; idle replicas steal."""
 
-    def __init__(self, make_batcher, n_replicas: int = 2, steal: bool = True):
+    def __init__(self, make_batcher, n_replicas: int = 2, steal: bool = True,
+                 max_admission_retries: int = 8, crash_plan=None):
         self.queues = [WSWMult(storage="linked", node_len=32) for _ in range(n_replicas)]
         self.batchers = [make_batcher() for _ in range(n_replicas)]
         self.steal = steal
@@ -349,7 +457,26 @@ class WorkStealingFrontend:
         # run used to discard — read both back via stats()
         self.counters = {
             "admitted": 0, "stolen": 0, "dup_completed": 0, "rejected": 0,
+            "gave_up": 0, "readmitted": 0, "crashed": 0,
         }
+        # Transient admissions (no free slot at admit time) back off
+        # exponentially instead of hot-spinning the queue: retry n waits
+        # 2^min(n,6) iterations, and after `max_admission_retries` the
+        # request is surfaced in `rejected` (+ the "gave_up" counter)
+        # rather than spinning run() to max_iters with zero progress.
+        self.max_admission_retries = int(max_admission_retries)
+        self._iter = 0
+        self._backoff: List[List] = [[] for _ in range(n_replicas)]
+        self._retries: Dict[int, int] = {}
+        # Crash injection + idempotent re-admission (repro.chaos
+        # ReplicaCrashPlan): `_orig[rid]` remembers each request's original
+        # prompt/budget so a resumed copy (prompt ++ tokens-so-far,
+        # remaining budget) can be reassembled into the full stream on
+        # completion — no token is ever emitted twice, and greedy decode
+        # makes the resumed stream identical to an uninterrupted one.
+        self.crash_plan = crash_plan
+        self.dead: set = set()
+        self._orig: Dict[int, tuple] = {}
         self.per_replica = [
             {"submitted": 0, "admitted": 0, "stolen": 0, "completed": 0,
              "rejected": 0}
@@ -364,8 +491,72 @@ class WorkStealingFrontend:
         self._lock = threading.Lock()
 
     def submit(self, replica: int, req: Request):
+        self._orig.setdefault(req.rid, (np.asarray(req.tokens), req.max_new))
         self.per_replica[replica]["submitted"] += 1
         self.queues[replica].put(req)
+
+    def _reassemble(self, r: Request) -> Request:
+        """Fold a resumed request's pre-crash emission back in: a resume
+        copy carries prompt = original ++ already-emitted, so the full
+        stream is that suffix plus this epoch's output."""
+        orig = self._orig.get(r.rid)
+        if orig is None:
+            return r
+        toks, max_new = orig
+        if len(r.tokens) > len(toks):
+            prev = [int(t) for t in np.asarray(r.tokens)[len(toks):]]
+            return Request(r.rid, toks, max_new, prev + list(r.out))
+        return r
+
+    def _crash(self, rep: int) -> None:
+        """Kill replica `rep`: its engine (slots, caches, pending folds) is
+        lost, its *queue* survives — queued-but-unadmitted requests stay
+        stealable by the living replicas, which is the paper's whole
+        point.  In-flight requests are re-admitted idempotently to
+        survivors keyed by rid + tokens-generated-so-far."""
+        b = self.batchers[rep]
+        self.dead.add(rep)
+        self.counters["crashed"] += 1
+        survivors = [i for i in range(len(self.batchers))
+                     if i not in self.dead]
+        inflight, seen = [], set()
+        for r in list(b.live):
+            # unified-mode pending folds appear in b.live too, so this
+            # sweep covers deferred admissions; dedup by object identity
+            if r is not None and id(r) not in seen:
+                seen.add(id(r))
+                inflight.append(r)
+        k = 0
+        for r in inflight:
+            rid = r.rid
+            with self._lock:
+                if rid in self.completed:
+                    continue
+            full = self._reassemble(r)
+            emitted = list(full.out)
+            toks, max_new = self._orig.get(
+                rid, (np.asarray(r.tokens), r.max_new))
+            remaining = max_new - len(emitted)
+            if remaining <= 0:
+                # the crash landed exactly on the completion boundary:
+                # everything was already emitted — complete, don't resume
+                with self._lock:
+                    if rid in self.completed:
+                        self.counters["dup_completed"] += 1
+                    else:
+                        self.completed[rid] = Request(
+                            rid, toks, max_new, emitted)
+                continue
+            resume_tokens = np.concatenate([
+                np.asarray(toks),
+                np.asarray(emitted, dtype=np.asarray(toks).dtype),
+            ]) if emitted else np.asarray(toks)
+            resume = Request(rid, resume_tokens, remaining)
+            tgt = survivors[k % len(survivors)] if survivors else rep
+            k += 1
+            self.counters["readmitted"] += 1
+            self.per_replica[tgt]["submitted"] += 1
+            self.queues[tgt].put(resume)
 
     def _next_request(self, replica: int) -> Optional[Request]:
         req = self.queues[replica].take()
@@ -392,7 +583,24 @@ class WorkStealingFrontend:
         batcher.  Returns True if anything happened — an admission, a
         rejection, or a live engine step."""
         worked = False
+        it = self._iter
+        self._iter += 1
+        if self.crash_plan is not None:
+            for rep in self.crash_plan.due(it):
+                if rep not in self.dead and rep < len(self.batchers):
+                    self._crash(rep)
+                    worked = True
+        # release backed-off transients whose retry timer expired
+        for rep, parked in enumerate(self._backoff):
+            if parked:
+                due = [e for e in parked if e[0] <= it]
+                if due:
+                    self._backoff[rep] = [e for e in parked if e[0] > it]
+                    for _, req in due:
+                        self.queues[rep].put(req)
         for rep, b in enumerate(self.batchers):
+            if rep in self.dead:
+                continue
             while b.n_live < b.B:
                 req = self._next_request(rep)
                 if req is None:
@@ -412,8 +620,21 @@ class WorkStealingFrontend:
                         worked = True
                         continue
                     # transient (no free slot despite the n_live check,
-                    # e.g. a racing admission): requeue and move on
-                    self.queues[rep].put(req)
+                    # e.g. a racing admission): bounded exponential backoff,
+                    # then give up visibly — requeueing unconditionally
+                    # could spin run() to max_iters with zero progress
+                    n = self._retries.get(req.rid, 0) + 1
+                    self._retries[req.rid] = n
+                    if n > self.max_admission_retries:
+                        with self._lock:
+                            if req.rid not in self.rejected:
+                                self.rejected[req.rid] = req
+                        self.counters["rejected"] += 1
+                        self.counters["gave_up"] += 1
+                        self.per_replica[rep]["rejected"] += 1
+                        worked = True
+                        continue
+                    self._backoff[rep].append((it + (1 << min(n, 6)), req))
                     break
                 self.counters["admitted"] += 1
                 self.per_replica[rep]["admitted"] += 1
@@ -421,12 +642,16 @@ class WorkStealingFrontend:
             if b.n_live:
                 for r in b.step():
                     self.per_replica[rep]["completed"] += 1
+                    r = self._reassemble(r)
                     with self._lock:
                         if r.rid in self.completed:
                             self.counters["dup_completed"] += 1  # weak mult.
                         else:
                             self.completed[r.rid] = r
                 worked = True
+        # parked transients keep the loop alive until they retry or give up
+        if any(self._backoff):
+            worked = True
         return worked
 
     def run(self, max_iters: int = 10_000) -> Dict[int, Request]:

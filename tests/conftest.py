@@ -1,4 +1,4 @@
-"""Shared test configuration: hypothesis profiles.
+"""Shared test configuration: hypothesis profiles + fault-drill fixtures.
 
 * ``dev`` (default) — the tier-1 smoke depth: few examples so the full
   suite stays fast on a laptop and in the tier-1 CI job.
@@ -9,6 +9,17 @@
 
 Tests that want profile-controlled depth must NOT pin ``max_examples`` in
 their own ``@settings`` (a local setting overrides the profile).
+
+The fault-drill helpers below are thin re-exports of :mod:`repro.chaos`
+(PR 9): the head-rewind / stale-advisory mechanics that used to be
+duplicated inline across test_pallas_ws.py, test_steal_policy.py,
+test_dispatch_conformance.py and test_wstrace.py now live on
+``FaultPlan``/``RewindSpec``, and the suites import them from here
+(``from conftest import ...``) or take the fixtures.  ``RewindSpec.draw``
+takes the same ``draw_int``/``draw_bool`` source the check functions use,
+so hypothesis and the seeded slices drive identical storm shapes —
+and conformance drills can apply ONE drawn spec to several layout-parity
+states.
 """
 
 try:
@@ -23,3 +34,54 @@ else:
     settings.register_profile("dev", max_examples=10, **_COMMON)
     settings.register_profile("ci", max_examples=40, derandomize=True, **_COMMON)
     settings.load_profile("dev")
+
+import pytest  # noqa: E402
+
+try:
+    from repro.chaos import (  # noqa: F401  (re-exported for the suites)
+        FaultPlan,
+        RewindSpec,
+        apply_rewind,
+        resume_state,
+        seed_advisory,
+    )
+
+    HAVE_CHAOS = True
+except ImportError:  # bare env without src on the path
+    HAVE_CHAOS = False
+
+
+def full_rewind(state, res):
+    """The classic maximal §7 drill: resume from a finished launch, then
+    drag every head to 0 and wipe every local bound — every already-claimed
+    slot becomes claimable exactly once more (mult == 2)."""
+    resume_state(state, res)
+    return apply_rewind(state, RewindSpec.full(state))
+
+
+def drawn_rewind(state, res, draw_int, draw_bool, *, heads=None,
+                 advisory_modes=("exact",)):
+    """Resume from ``res`` and apply a drawn storm; returns the spec so a
+    second (layout-parity) state can replay the identical rewind with
+    ``apply_rewind``."""
+    resume_state(state, res)
+    spec = RewindSpec.draw(state, draw_int, draw_bool, heads=heads,
+                           advisory_modes=advisory_modes)
+    apply_rewind(state, spec)
+    return spec
+
+
+@pytest.fixture
+def fault_plan_factory():
+    """Seed -> FaultPlan (the hypothesis-friendly whole-plan constructor)."""
+    if not HAVE_CHAOS:
+        pytest.skip("repro.chaos unavailable")
+    return FaultPlan.from_seed
+
+
+@pytest.fixture
+def rewind_storm():
+    """The full-rewind drill as a fixture: ``rewind_storm(state, res)``."""
+    if not HAVE_CHAOS:
+        pytest.skip("repro.chaos unavailable")
+    return full_rewind

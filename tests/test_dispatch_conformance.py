@@ -74,6 +74,9 @@ from repro.pallas_ws.tasks import (  # noqa: E402
     emit_decode_tasks,
 )
 
+# shared fault-drill mechanics (repro.chaos via conftest)
+from conftest import apply_rewind, drawn_rewind, resume_state  # noqa: E402
+
 P = 3  # programs: fewer than most drawn expert counts, so thieves roam
 
 
@@ -341,21 +344,15 @@ def check_adversarial_schedules(draw_int, draw_bool, steal_policy="cost",
 
     n_relaunches = draw_int(1, 2)
     for step in range(n_relaunches):
-        # identical adversarial staleness on both sides (their heads agree,
-        # so the drawn rewind targets are valid for both)
+        # identical adversarial staleness on both sides: ONE drawn
+        # RewindSpec (targets read from the host heads — they agree, so
+        # the spec is valid for both) replayed onto each layout-parity
+        # state via the shared repro.chaos drill
         np.testing.assert_array_equal(res_h.head, res_j.head)
-        heads = np.array(res_h.head), np.array(res_j.head)
-        locals_ = np.array(res_h.local_head), np.array(res_j.local_head)
-        for q in range(E):
-            if draw_bool():
-                tgt = draw_int(0, max(0, int(res_h.head[q])))
-                heads[0][q] = heads[1][q] = tgt
-        for pidx in range(P):
-            if draw_bool():
-                locals_[0][pidx] = 0
-                locals_[1][pidx] = 0
-        sh.head, sh.local_head = heads[0], locals_[0]
-        sj.head, sj.local_head = heads[1], locals_[1]
+        spec = drawn_rewind(sh, res_h, draw_int, draw_bool,
+                            heads=res_h.head)
+        resume_state(sj, res_j)
+        apply_rewind(sj, spec)
         # sometimes under-provision the relaunch: partial drains leave
         # uneven duplicate counts behind — the combine must still be exact
         r = draw_int(1, rounds)

@@ -41,6 +41,9 @@ from repro.pallas_ws import (  # noqa: E402
     run_ws_schedule,
 )
 
+# shared fault-drill mechanics (repro.chaos via conftest)
+from conftest import full_rewind  # noqa: E402
+
 KEY = jax.random.PRNGKey(7)
 
 
@@ -204,9 +207,9 @@ def test_device_multiplicity_normalization_under_head_rewind():
     res1 = run_ws_schedule(state, q, k, v, causal=True, bq=bq, bk=bk, steal=True)
     assert (res1.mult[: state.n_tasks] == 1).all()
 
-    # adversarial rewind: stale Head writes + fresh processes (no local bounds)
-    state.head = np.zeros_like(state.head)
-    state.local_head = np.zeros_like(state.local_head)
+    # adversarial rewind: stale Head writes + fresh processes (no local
+    # bounds) — the shared maximal-storm drill from repro.chaos
+    full_rewind(state, res1)
     res2 = run_ws_schedule(
         state, q, k, v, causal=True, bq=bq, bk=bk, steal=True,
         out=res1.out, mult=jnp.asarray(res1.mult),

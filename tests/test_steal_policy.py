@@ -52,6 +52,10 @@ from repro.pallas_ws.kernel import (  # noqa: E402
 from repro.pallas_ws.queues import make_queue_state, queue_costs  # noqa: E402
 from repro.pallas_ws.tasks import emit_flash_tasks, max_cost  # noqa: E402
 
+# shared fault-drill mechanics (repro.chaos via conftest): the advisory
+# seeding and head-rewind storms these drills used to hand-roll
+from conftest import drawn_rewind, seed_advisory as _seed_advisory  # noqa: E402
+
 P = 3
 
 
@@ -85,23 +89,6 @@ def _setup(idx, gates, E, bt, seed):
     tasks, routed = route_to_tasks(idx, gates, E, bt=bt)
     state = make_queue_state(tasks, P, n_queues=E, partition="owner")
     return x, w, tasks, routed, state
-
-
-def _seed_advisory(state, mode, rng):
-    """Adversarially stale advisory summaries: garbage the cost policy must
-    survive (selection quality only — never correctness or progress)."""
-    true = np.asarray(queue_costs(state), dtype=np.int32)
-    if mode == "zeros":
-        state.remaining = np.zeros_like(true)
-    elif mode == "reversed":
-        state.remaining = true[::-1].copy()
-    elif mode == "random":
-        state.remaining = rng.randint(0, 1 + 2 * int(true.max(initial=1)),
-                                      size=true.shape).astype(np.int32)
-    else:
-        assert mode == "exact"
-        state.remaining = true
-    return state
 
 
 # ---------------------------------------------------------------------------
@@ -154,7 +141,6 @@ def check_policy_invariance(draw_int):
 
 def check_cost_policy_rewind_drills(draw_int, draw_bool):
     E, T, k, bt, seed, idx, gates = _routing_from(draw_int)
-    rng = np.random.RandomState(seed ^ 0x5A5A)
     x, w, tasks, routed, state = _setup(idx, gates, E, bt, seed)
     rounds = default_rounds(state, steal=True)
     res = run_moe_schedule(
@@ -163,15 +149,11 @@ def check_cost_policy_rewind_drills(draw_int, draw_bool):
     )
     assert (res.mult[: state.n_tasks] >= 1).all(), "first launch drains"
     for _ in range(draw_int(1, 2)):
-        for q in range(state.n_queues):
-            if draw_bool():
-                state.head[q] = draw_int(0, max(0, int(res.head[q])))
-        for pidx in range(P):
-            if draw_bool():
-                state.local_head[pidx] = 0
-        # relaunches inherit adversarially-stale advisories on top of the
-        # rewound heads — the worst §7-style staleness for victim selection
-        _seed_advisory(state, ("zeros", "reversed", "random")[draw_int(0, 2)], rng)
+        # shared storm drill: resume from the finished launch, rewind drawn
+        # heads to stale values, wipe drawn local bounds, and re-corrupt the
+        # advisories — the worst §7-style staleness for victim selection
+        drawn_rewind(state, res, draw_int, draw_bool,
+                     advisory_modes=("zeros", "reversed", "random"))
         res = run_moe_schedule(
             state, x, routed.tok_idx, *w, bt=bt, steal=True,
             steal_policy="cost", rounds=draw_int(1, rounds),

@@ -58,6 +58,9 @@ from repro.wstrace.ring import (  # noqa: E402
     decode_rings,
 )
 from repro.wstrace.metrics import SchedulerMetrics  # noqa: E402
+
+# shared fault-drill mechanics (repro.chaos via conftest)
+from conftest import full_rewind  # noqa: E402
 from repro.wstrace.perfetto import PID_MESH, to_perfetto  # noqa: E402
 from repro.wstrace.trace import WSTrace  # noqa: E402
 
@@ -254,9 +257,9 @@ def test_rewind_drill_stream_consistency():
     stream1 = _check_stream_vs_counters(state, res1)
     assert (stream1[:, EV_MULT] == 1).all()
 
-    # §7-style staleness: every Head dragged to 0, local bounds wiped
-    state.head = np.zeros_like(state.head)
-    state.local_head = np.zeros_like(state.local_head)
+    # §7-style staleness: every Head dragged to 0, local bounds wiped —
+    # the shared maximal-storm drill from repro.chaos
+    full_rewind(state, res1)
     res2 = run_ws_schedule(
         state, q, k, v, causal=True, bq=bq, bk=bk, steal=True,
         out=res1.out, mult=jnp.asarray(res1.mult), trace=True,
