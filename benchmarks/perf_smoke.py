@@ -142,6 +142,22 @@ def compare(fresh: dict, committed: dict, tol: float) -> list:
         _check(errs, f"{tag} pool schedule parity",
                n["pool_makespan"] == n["ws_cost_makespan"],
                f"pool {n['pool_makespan']} != ws {n['ws_cost_makespan']}")
+        # amortized synchronization (batched Put + half-run Steal): the
+        # batched queue build must stay scatter-free (absolute — one
+        # scatter per record is the regression this PR removed), and the
+        # half-run probe reduction must not collapse vs the committed
+        # reference.  .get guards let a fresh gate run against a
+        # pre-halfrun committed BENCH.json.
+        scat = n.get("put_scatter_ops") or {}
+        _check(errs, f"{tag} batched-put scatter-free",
+               all(v == 0 for v in scat.values() if isinstance(v, int)),
+               f"queue-build lowering emits scatters: {scat}")
+        if o.get("probe_reduction_halfrun") and n.get("probe_reduction_halfrun"):
+            _check(errs, f"{tag} half-run probe reduction",
+                   n["probe_reduction_halfrun"]
+                   >= o["probe_reduction_halfrun"] * lo,
+                   f"{n['probe_reduction_halfrun']} < "
+                   f"{o['probe_reduction_halfrun']} * {lo}")
     s_new = {(r["mode"], r["path"]): r for r in fresh.get("serving", [])}
     s_old = {(r["mode"], r["path"]): r for r in committed.get("serving", [])}
     if s_old and not set(s_new) & set(s_old):

@@ -175,6 +175,11 @@ def summarize(quick: bool) -> dict:
                 scan_per_extraction_cost=r["ws_cost"]["scan_per_extraction"],
                 scan_per_extraction_scan=r["ws_scan"]["scan_per_extraction"],
                 scan_traffic_reduction=r["traffic_reduction"],
+                ws_halfrun_makespan=r.get("ws_halfrun", {}).get("makespan"),
+                scan_per_extraction_halfrun=r.get("ws_halfrun", {}).get(
+                    "scan_per_extraction"),
+                probe_reduction_halfrun=r.get("probe_reduction_halfrun"),
+                put_scatter_ops=r.get("put_scatter_ops"),
                 queue_bytes=r["queue_bytes"],
                 dryrun=r.get("dryrun"),
             )

@@ -105,6 +105,42 @@ def run_cell(E, T, k, P, bt, d, f, skew, seed=0, dryrun_analysis=True):
         row[name] = telemetry(res, state.n_tasks)
         row[name]["wall_s"] = round(time.perf_counter() - t0, 3)
 
+    # half-run amortized steal: one probe claims min(ceil(rem/2), cap)
+    # contiguous slots, so the win scales with queue DEPTH in slots.  The
+    # grid's mean load is ~1 tile/expert (rem <= 2 takes 1 slot — no runs),
+    # so this is measured on the cell's deep-queue slice: the same T*k
+    # routed rows concentrated into the E//16 hot set at fine tile
+    # granularity (bt=2 -> ~32 tiles per hot queue), the regime the
+    # per-slot probe traffic actually hurts in.  BOTH rows get the SAME
+    # cap-adjusted round budget so the probes-per-extraction comparison is
+    # launch-for-launch fair (probe traffic accumulates per round).
+    half_cap, bt_deep = 4, 2
+    h = max(1, E // 16)
+    rng_h = np.random.RandomState(seed + 1)
+    hot = rng_h.choice(E, size=h, replace=False)
+    k_deep = min(k, h)
+    idx_d = np.stack(
+        [rng_h.choice(hot, size=k_deep, replace=False) for _ in range(T)]
+    ).astype(np.int32)
+    gates_d = rng_h.uniform(0.2, 1.0, size=(T, k_deep)).astype(np.float32)
+    gates_d /= gates_d.sum(1, keepdims=True)
+    tasks_d, routed_d = route_to_tasks(idx_d, gates_d, E, bt=bt_deep)
+    rounds_hr = expert_rounds_bound(T * k_deep, bt_deep, E, P, steal=True,
+                                    steal_run_cap=half_cap)
+    for name, cap in (("ws_cost_eqrounds", 1), ("ws_halfrun", half_cap)):
+        state = make_queue_state(tasks_d, P, n_queues=E, partition="owner")
+        t0 = time.perf_counter()
+        res = run_moe_schedule(
+            state, x, routed_d.tok_idx, *w, bt=bt_deep, steal=True,
+            steal_policy="cost", rounds=rounds_hr, steal_run_cap=cap,
+        )
+        row[name] = telemetry(res, state.n_tasks)
+        row[name]["wall_s"] = round(time.perf_counter() - t0, 3)
+    row["halfrun_cap"] = half_cap
+    row["probe_reduction_halfrun"] = round(
+        row["ws_cost_eqrounds"]["scan_per_extraction"]
+        / max(1e-9, row["ws_halfrun"]["scan_per_extraction"]), 2)
+
     # traced-layout comparison: padded (PR 3) vs shared pool (this PR)
     records, live, routed_p = route_to_tasks_jax(
         jnp.asarray(idx), jnp.asarray(gates), E, bt=bt
@@ -132,6 +168,30 @@ def run_cell(E, T, k, P, bt, d, f, skew, seed=0, dryrun_analysis=True):
         pool=pool_bytes,
         ratio=round(padded_bytes / max(1, pool_bytes), 2),
     )
+
+    # batched-Put lowering audit: the queue-build pipelines emit whole
+    # per-expert segments as vectorized gathers — zero HLO scatter ops
+    # (the per-record formulation paid one scatter per queue column)
+    def build_padded(i, g):
+        rc, lv, r = route_to_tasks_jax(i, g, E, bt=bt)
+        c, cl = expert_queue_candidates(rc, lv, E)
+        s = make_queue_state_jax(c, cl, P, n_tasks=rc.shape[0] * rc.shape[1])
+        return s.tasks, s.tail, s.remaining
+
+    def build_pool(i, g):
+        rec, tl, off, r = route_to_tasks_pool_jax(i, g, E, bt=bt)
+        s = make_pool_queue_state_jax(rec, tl, off, r.loads, P,
+                                      n_tasks=rec.shape[0])
+        return s.tasks, s.tail, s.remaining
+
+    row["put_scatter_ops"] = {}
+    for name, fn in (("padded", build_padded), ("pool", build_pool)):
+        try:
+            text = jax.jit(fn).lower(
+                jnp.asarray(idx), jnp.asarray(gates)).as_text()
+            row["put_scatter_ops"][name] = text.count("scatter")
+        except Exception as e:  # pragma: no cover - backend quirk
+            row["put_scatter_ops"][name] = str(e)[:200]
 
     if dryrun_analysis:
         rounds = expert_rounds_bound(T * k, bt, E, P, steal=True)
@@ -195,6 +255,7 @@ def main(argv=None):
     rows = []
     hdr = ("E,skew,cost_makespan,scan_makespan,static_makespan,"
            "cost_scan/extr,scan_scan/extr,traffic_reduction,"
+           "halfrun_scan/extr,probe_red_halfrun,put_scatters,"
            "pool_makespan,bytes_padded,bytes_pool,bytes_ratio")
     print(hdr)
     for E, skew in grid:
@@ -204,10 +265,14 @@ def main(argv=None):
         )
         row["traffic_reduction"] = round(red, 1)
         rows.append(row)
+        scat = row["put_scatter_ops"]
         print(
             f"{E},{skew},{row['ws_cost']['makespan']},{row['ws_scan']['makespan']},"
             f"{row['static']['makespan']},{row['ws_cost']['scan_per_extraction']},"
             f"{row['ws_scan']['scan_per_extraction']},{row['traffic_reduction']},"
+            f"{row['ws_halfrun']['scan_per_extraction']},"
+            f"{row['probe_reduction_halfrun']},"
+            f"{scat.get('padded')}+{scat.get('pool')},"
             f"{row['pool']['makespan']},{row['queue_bytes']['padded']},"
             f"{row['queue_bytes']['pool']},{row['queue_bytes']['ratio']}"
         )
@@ -237,6 +302,25 @@ def main(argv=None):
         if r["ws_cost"]["makespan"] > r["ws_scan"]["makespan"] * 1.05:
             bad.append(("cost policy makespan regressed vs scan", r["E"],
                         r["skew"]))
+    # amortized-synchronization claims (this PR): half-run probe reduction
+    # >= 2x on deep queues (E >= 160, skew >= 4), zero-scatter batched Put
+    # everywhere
+    for r in rows:
+        scat = r.get("put_scatter_ops", {})
+        if any(isinstance(v, int) and v > 0 for v in scat.values()):
+            bad.append(("batched Put lowering emits scatters", r["E"],
+                        r["skew"], scat))
+        if r["E"] >= 160 and r["skew"] >= 4:
+            hr = r.get("probe_reduction_halfrun", 0.0)
+            if hr < 2.0:
+                bad.append(("half-run probe reduction < 2x", r["E"],
+                            r["skew"], hr))
+            # Graham slack: a claimed run can serialize at most cap extra
+            # tiles (max cost bt_deep=2) on one program
+            slack = r.get("halfrun_cap", 4) * 2
+            if (r["ws_halfrun"]["makespan"]
+                    > r["ws_cost_eqrounds"]["makespan"] + slack):
+                bad.append(("half-run makespan regressed", r["E"], r["skew"]))
     if bad:
         print(f"[steal_policy] ISSUE-4 claims failed: {bad}")
         return 1

@@ -270,24 +270,31 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
     # values and advisory corruption is plain data, so a fault-injected
     # lowering must meet the identical zero-synchronization bar.
     _faulted = FaultPlan(stalls=(2, 0, 1, 0), advisory="random")
+    # the half-run cases (steal_run_cap=4) audit this PR's amortized Steal:
+    # claiming a contiguous run with one probe + one coalesced advisory
+    # write must lower to the same plain tensor ops as per-slot claims
     cases = (
-        ("put-take", False, "cost", "padded", False, None),
-        ("put-steal", True, "scan", "padded", False, None),
-        ("put-steal", True, "cost", "padded", False, None),
-        ("put-steal", True, "cost", "pool", False, None),
-        ("put-take-traced", False, "cost", "padded", True, None),
-        ("put-steal-traced", True, "cost", "padded", True, None),
-        ("put-steal-faulted", True, "cost", "padded", True, _faulted),
+        ("put-take", False, "cost", "padded", False, None, 1),
+        ("put-steal", True, "scan", "padded", False, None, 1),
+        ("put-steal", True, "cost", "padded", False, None, 1),
+        ("put-steal", True, "cost", "pool", False, None, 1),
+        ("put-steal-halfrun", True, "cost", "padded", False, None, 4),
+        ("put-steal-halfrun", True, "cost", "pool", False, None, 4),
+        ("put-take-traced", False, "cost", "padded", True, None, 1),
+        ("put-steal-traced", True, "cost", "padded", True, None, 1),
+        ("put-steal-halfrun-traced", True, "cost", "padded", True, None, 4),
+        ("put-steal-faulted", True, "cost", "padded", True, _faulted, 1),
     )
     rows = []
-    for exp, steal, policy, layout, trace, fault in cases:
+    for exp, steal, policy, layout, trace, fault, cap in cases:
         n_queues = n_experts if steal else n_programs
 
         def pipeline(idx, gates, x, wg, wu, wd, steal=steal, policy=policy,
                      layout=layout, n_queues=n_queues, trace=trace,
-                     fault=fault):
+                     fault=fault, cap=cap):
             rounds = expert_rounds_bound(
-                n_tokens * top_k, bt, n_queues, n_programs, steal
+                n_tokens * top_k, bt, n_queues, n_programs, steal,
+                steal_run_cap=cap,
             )
             if layout == "pool":
                 rec, tail, off, routed = route_to_tasks_pool_jax(
@@ -309,7 +316,7 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
             res = run_moe_schedule(
                 state, x, routed.tok_idx, wg, wu, wd, bt=bt, steal=steal,
                 steal_policy=policy, rounds=rounds, trace=trace,
-                fault_plan=fault,
+                fault_plan=fault, steal_run_cap=cap,
             )
             outs = (res.out, res.mult, res.head, res.taken, res.remaining)
             if trace:  # keep the rings live so their stores aren't DCE'd
@@ -321,7 +328,8 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
             jnp.asarray(wg), jnp.asarray(wu), jnp.asarray(wd),
         ).as_text()
         tag = (f"{policy},{layout}" + (",trace" if trace else "")
-               + (",faulted" if fault is not None else ""))
+               + (",faulted" if fault is not None else "")
+               + (f",cap{cap}" if cap > 1 else ""))
         rows.append(_fence_free_lowering_row(
             text, f"traced Put lowering [{tag}]", exp,
             f"moe-ws-traced[{tag}]", n_tokens * top_k,
@@ -376,10 +384,56 @@ def audit_traced_put(n_tokens: int = 16, n_experts: int = 8, top_k: int = 2,
     print(
         "[zero-cost] traced-put audit OK: moe-ws-traced jit lowering has "
         "0 RMW / 0 locks / 0 fences on put-take and put-steal "
-        "(scan + cost policies, padded + pool layouts, event tracing "
-        "off AND on, fault injection on), on the "
+        "(scan + cost policies, padded + pool layouts, half-run claims "
+        "at steal_run_cap=4, event tracing off AND on, fault injection "
+        "on), on the "
         "custom-VJP backward (grad-dense + grad-ws) and on the "
         f"shard_map mesh dispatch (D={n_dev})"
+    )
+    return rows
+
+
+def audit_batched_put_host(n: int = 4096, segment: int = 64) -> List[Dict]:
+    """Host-layout audit of the batched Put (amortized synchronization):
+    count the shared-array instruction mix of :meth:`put_segment` versus
+    the task-at-a-time :meth:`put` loop on the SAME payloads.  The segment
+    path must issue strictly fewer queue-array writes per Put (one
+    pre-clear pair and ONE advisory write per segment instead of per task),
+    reach the identical final queue state, and clear the same fence-free
+    bar: zero RMWs, zero lock acquisitions."""
+    from benchmarks.instrument import CountingBackend
+    from repro.pallas_ws import PallasWSHost
+
+    cb_loop = CountingBackend()
+    q_loop = PallasWSHost(backend=cb_loop, capacity=n + 2)
+    for i in range(n):
+        assert q_loop.put(i)
+    cb_seg = CountingBackend()
+    q_seg = PallasWSHost(backend=cb_seg, capacity=n + 2)
+    for s in range(0, n, segment):
+        assert q_seg.put_segment(range(s, min(s + segment, n)))
+    assert q_loop.snapshot() == q_seg.snapshot(), "batched Put final-state"
+    rows = []
+    for exp, cb in (("put-loop", cb_loop), ("put-segment", cb_seg)):
+        c = cb.counts.snapshot()
+        rows.append(dict(
+            experiment=exp,
+            algorithm="pallas-ws-host-put",
+            n_ops=n,
+            reads_per_op=round(c["reads"] / n, 4),
+            writes_per_op=round(c["writes"] / n, 4),
+            rmws_per_op=c["rmws"],
+            locks_per_op=c["locks"],
+        ))
+    loop_w = rows[0]["writes_per_op"]
+    seg_w = rows[1]["writes_per_op"]
+    assert seg_w < loop_w, (
+        f"put_segment must amortize queue-array writes: {seg_w} vs {loop_w}"
+    )
+    assert all(r["rmws_per_op"] == 0 and r["locks_per_op"] == 0 for r in rows)
+    print(
+        f"[zero-cost] batched-put audit OK: {seg_w} vs {loop_w} queue-array "
+        f"writes per Put (segment={segment}), 0 RMW / 0 locks on both"
     )
     return rows
 
@@ -464,6 +518,7 @@ def main(n_ops: int = 100_000):
         print(line)
         out.append(line)
     audit_fence_free(rows)
+    rows.extend(audit_batched_put_host())
     try:
         import jax  # noqa: F401
 

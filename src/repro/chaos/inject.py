@@ -45,7 +45,8 @@ class Segment:
     budget: int               # rounds provisioned for this launch
     start_head: np.ndarray    # [n_queues] head at segment start (post-fault)
     start_local: np.ndarray   # [n_programs, n_queues] local bounds at start
-    stream: np.ndarray        # decoded (round, prog)-sorted events [n, 10]
+    stream: np.ndarray        # decoded (round, prog)-sorted events
+                              #   [n, ring.EVENT_WIDTH]
     dropped: int              # ring-overflow drops in this segment
     res: object               # the raw WSRunResult
 

@@ -130,6 +130,32 @@ def _expert_pool_tiles(n_tokens: int, top_k: int, n_experts: int, bt: int) -> in
     return -(-(n_tokens * top_k) // bt) + n_experts
 
 
+# Per-length-vector stage-assembly memo (ROADMAP PR-8 follow-on): the host
+# queue build is pure in its geometry inputs — the decode length vector, the
+# pending-admission (prefill) shape, and the static tile/config knobs — so
+# repeated steps with the same key (steady-state decode advances every
+# length by 1, but batches that shrink/regrow repeat keys; repeated replays
+# and drills repeat them constantly) reuse the built QueueState verbatim.
+# Reuse is safe because launch_ws_grid never mutates its host inputs: every
+# mutable array is copied via jnp.asarray and the aliased outputs are new
+# buffers.  Bounded: the cache resets when it would exceed _STAGE_CACHE_MAX.
+_STAGE_CACHE: Dict[tuple, tuple] = {}
+_STAGE_CACHE_STATS = {"builds": 0, "hits": 0}
+_STAGE_CACHE_MAX = 128
+
+
+def stage_cache_stats() -> Dict[str, int]:
+    """Copy of the unified-step stage-assembly cache counters (regression
+    hook: one ``builds`` increment per unique key, ``hits`` otherwise)."""
+    return dict(_STAGE_CACHE_STATS)
+
+
+def clear_stage_cache() -> None:
+    _STAGE_CACHE.clear()
+    _STAGE_CACHE_STATS["builds"] = 0
+    _STAGE_CACHE_STATS["hits"] = 0
+
+
 def unified_step_supported(cfg) -> bool:
     """True when :func:`decode_step_unified` covers this architecture with
     its bitwise-decode parity contract: full-attention GQA decoder families
@@ -292,26 +318,42 @@ def decode_step_unified(
             for j in range(pool)
         ]
 
-    stages = [[glue(GLUE_EMBED, 0)]]
-    for lyr in range(L):
-        stages.append([glue(GLUE_PRE, lyr)])
-        att = dec_tiles(lyr)
-        if has_prefill:
-            att += flash_tiles(lyr)
-        stages.append(att)
-        stages.append([glue(GLUE_POST, lyr)])
-        if is_moe:
-            exp = expert_tiles(lyr, SEG_DECODE, pool_dec, exp_dec_base)
+    def build_stages():
+        stages = [[glue(GLUE_EMBED, 0)]]
+        for lyr in range(L):
+            stages.append([glue(GLUE_PRE, lyr)])
+            att = dec_tiles(lyr)
             if has_prefill:
-                exp += expert_tiles(lyr, SEG_PREFILL, pool_pre, exp_pre_base)
-            stages.append(exp)
-            stages.append([glue(GLUE_COMB, lyr)])
-    stages.append([glue(GLUE_LOGITS, 0)])
-    assert glue_tid[0] == n_glue, (glue_tid[0], n_glue)
+                att += flash_tiles(lyr)
+            stages.append(att)
+            stages.append([glue(GLUE_POST, lyr)])
+            if is_moe:
+                exp = expert_tiles(lyr, SEG_DECODE, pool_dec, exp_dec_base)
+                if has_prefill:
+                    exp += expert_tiles(lyr, SEG_PREFILL, pool_pre,
+                                        exp_pre_base)
+                stages.append(exp)
+                stages.append([glue(GLUE_COMB, lyr)])
+        stages.append([glue(GLUE_LOGITS, 0)])
+        assert glue_tid[0] == n_glue, (glue_tid[0], n_glue)
+        return make_staged_queue_state(stages, n_programs, partition="owner")
 
-    state, stage_open, rounds = make_staged_queue_state(
-        stages, n_programs, partition="owner"
+    # memo key: everything the assembly reads — the length vector, the
+    # pending-admission shape, and the static geometry knobs
+    cache_key = (
+        tuple(int(x) for x in lengths), Lp, B, L, H, bk_d, bq_p, bk_p,
+        bt, n_programs, bool(is_moe), E, top_k, pool_dec, pool_pre,
     )
+    cached = _STAGE_CACHE.get(cache_key)
+    if cached is None:
+        state, stage_open, rounds = build_stages()
+        _STAGE_CACHE_STATS["builds"] += 1
+        if len(_STAGE_CACHE) >= _STAGE_CACHE_MAX:
+            _STAGE_CACHE.clear()
+        _STAGE_CACHE[cache_key] = (state, stage_open, rounds)
+    else:
+        _STAGE_CACHE_STATS["hits"] += 1
+        state, stage_open, rounds = cached
     assert state.n_tasks == n_tasks, (state.n_tasks, n_tasks)
 
     # -- output buffers (all accumulated/overwritten in-kernel)

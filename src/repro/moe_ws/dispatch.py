@@ -188,10 +188,14 @@ def route_to_tasks(
 def _group_by_expert_jax(idx, gates, n_experts: int):
     """Stable counting sort of the routed (token, choice) pairs by expert —
     the shared grouping preamble of both traced Puts: a stable argsort over
-    the flat ``[T·k]`` pair list plus a cumsum rank of each pair within its
-    expert.  Returns ``(T, k, order, sorted_e, flat_t, flat_g, loads,
-    rank)``; the caller scatters ``flat_t[order]``/``flat_g[order]`` to
-    ``row_offset[sorted_e] + rank`` for its layout's offsets."""
+    the flat ``[T·k]`` pair list plus per-expert segment bounds read off the
+    sorted key column with ``searchsorted`` (no scatter-add — the counts are
+    bit-identical and the lowering is gather-only).  Returns ``(T, k, order,
+    sorted_e, flat_t, flat_g, loads, start)`` where ``start`` is the
+    exclusive cumsum of ``loads`` (expert ``e``'s pairs are
+    ``order[start[e] : start[e] + loads[e]]``); the caller *gathers* each
+    destination row's pair from that segment — the batched-Put inverse of
+    the old one-scatter-per-pair formulation."""
     import jax.numpy as jnp
 
     idx = jnp.asarray(idx, jnp.int32)
@@ -202,12 +206,11 @@ def _group_by_expert_jax(idx, gates, n_experts: int):
     flat_g = gates.reshape(-1)
     order = jnp.argsort(flat_e, stable=True)
     sorted_e = flat_e[order]
-    loads = jnp.zeros((n_experts,), jnp.int32).at[flat_e].add(1)
-    start = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(loads)[:-1]]
-    )
-    rank = jnp.arange(T * k, dtype=jnp.int32) - start[sorted_e]
-    return T, k, order, sorted_e, flat_t, flat_g, loads, rank
+    e_ids = jnp.arange(n_experts, dtype=jnp.int32)
+    start = jnp.searchsorted(sorted_e, e_ids, side="left").astype(jnp.int32)
+    ends = jnp.searchsorted(sorted_e, e_ids, side="right").astype(jnp.int32)
+    loads = ends - start
+    return T, k, order, sorted_e, flat_t, flat_g, loads, start
 
 
 def route_to_tasks_jax(idx, gates, n_experts: int, bt: int = 8,
@@ -225,7 +228,8 @@ def route_to_tasks_jax(idx, gates, n_experts: int, bt: int = 8,
     receives at most one pair per token even when the router sends it every
     token.  Callers feeding routings that may repeat an expert within a
     token's k choices must pass ``max_expert_load`` (up to ``T·k``) —
-    a load above the provisioned range would silently drop scatters.
+    pairs beyond the provisioned range are mask-dropped (the segment-gather
+    materialization never writes outside its expert's rows).
     Returns ``(records [E, R/bt, TASK_WIDTH], live [E, R/bt], RoutedSet)``
     where the RoutedSet fields are jnp values (``expert_off`` is the static
     ``e ↦ e·R`` map) — feed the records through
@@ -243,19 +247,28 @@ def route_to_tasks_jax(idx, gates, n_experts: int, bt: int = 8,
 
     _register_routed_pytree()
     E = n_experts
-    T, k, order, sorted_e, flat_t, flat_g, loads, rank = _group_by_expert_jax(
+    T, k, order, sorted_e, flat_t, flat_g, loads, start = _group_by_expert_jax(
         idx, gates, E
     )
     Tk = T * k
     cap = min(Tk, T if max_expert_load is None else int(max_expert_load))
     tiles_per_e = _cdiv(cap, bt)     # static
     R = tiles_per_e * bt             # static rows per expert
-    dest = sorted_e * R + rank
-    tok_idx = jnp.zeros((E * R,), jnp.int32).at[dest].set(flat_t[order])
-    gate_rows = jnp.zeros((E * R,), jnp.float32).at[dest].set(flat_g[order])
-    row_src = jnp.full((E * R,), Tk, jnp.int32).at[dest].set(
-        order.astype(jnp.int32)
-    )
+    # Batched Put (DESIGN.md §3.6): materialize every expert's row segment
+    # as ONE masked vectorized gather per output array instead of one
+    # scatter per routed pair — row e·R + j holds pair order[start[e] + j]
+    # iff j < loads[e].  Bit-identical to the scatter for any in-contract
+    # routing (each live row had exactly one writer), and the lowering
+    # carries zero scatter ops (benchmarks/zero_cost.py audits this).
+    rows = jnp.arange(E * R, dtype=jnp.int32)
+    e_row = rows // R
+    j_row = rows - e_row * R
+    row_live = j_row < loads[e_row]
+    src = jnp.minimum(start[e_row] + j_row, Tk - 1)
+    pair = order[src].astype(jnp.int32)
+    tok_idx = jnp.where(row_live, flat_t[pair], 0)
+    gate_rows = jnp.where(row_live, flat_g[pair], jnp.float32(0))
+    row_src = jnp.where(row_live, pair, Tk)
 
     e_ids = jnp.arange(E, dtype=jnp.int32)[:, None]          # [E, 1]
     i_ids = jnp.arange(tiles_per_e, dtype=jnp.int32)[None, :]  # [1, R/bt]
@@ -322,7 +335,7 @@ def route_to_tasks_pool_jax(idx, gates, n_experts: int, bt: int = 8):
 
     _register_routed_pytree()
     E = n_experts
-    T, k, order, sorted_e, flat_t, flat_g, loads, rank = _group_by_expert_jax(
+    T, k, order, sorted_e, flat_t, flat_g, loads, start = _group_by_expert_jax(
         idx, gates, E
     )
     Tk = T * k
@@ -332,13 +345,25 @@ def route_to_tasks_pool_jax(idx, gates, n_experts: int, bt: int = 8):
         [jnp.zeros((1,), jnp.int32), jnp.cumsum(n_tiles).astype(jnp.int32)]
     )
     row_off = toff * bt
-    dest = row_off[sorted_e] + rank
     n_rows = pool_tiles * bt
-    tok_idx = jnp.zeros((n_rows,), jnp.int32).at[dest].set(flat_t[order])
-    gate_rows = jnp.zeros((n_rows,), jnp.float32).at[dest].set(flat_g[order])
-    row_src = jnp.full((n_rows,), Tk, jnp.int32).at[dest].set(
-        order.astype(jnp.int32)
+    # Batched Put: per-expert pool segments materialized by one masked
+    # gather per output array (no per-pair scatters) — pool row
+    # row_off[e] + j holds pair order[start[e] + j] iff j < loads[e];
+    # rows past each segment's live prefix (tile tail padding and the pool
+    # tail) are dead.  Bit-identical to the scatter formulation.
+    rows = jnp.arange(n_rows, dtype=jnp.int32)
+    tile_row = rows // bt
+    e_row = jnp.clip(
+        jnp.searchsorted(toff, tile_row, side="right").astype(jnp.int32) - 1,
+        0, E - 1,
     )
+    j_row = rows - row_off[e_row]
+    row_live = (tile_row < toff[E]) & (j_row < loads[e_row])
+    src = jnp.minimum(start[e_row] + j_row, Tk - 1)
+    pair = order[src].astype(jnp.int32)
+    tok_idx = jnp.where(row_live, flat_t[pair], 0)
+    gate_rows = jnp.where(row_live, flat_g[pair], jnp.float32(0))
+    row_src = jnp.where(row_live, pair, Tk)
 
     # per-pool-tile records: tile j belongs to the expert whose segment
     # [toff[e], toff[e+1}) contains j (duplicates in toff — empty experts —
@@ -389,7 +414,8 @@ def expert_queue_candidates(records, live, n_queues: int):
 
 
 def expert_rounds_bound(
-    n_routed: int, bt: int, n_queues: int, n_programs: int, steal: bool
+    n_routed: int, bt: int, n_queues: int, n_programs: int, steal: bool,
+    steal_run_cap: int = 1,
 ) -> int:
     """Static worst-case lockstep rounds to drain any routing of
     ``n_routed`` pairs — the trace-time stand-in for
@@ -400,11 +426,13 @@ def expert_rounds_bound(
     rows).  The PR-3 ``+ n_queues + 8`` slack is gone: both steal policies
     guarantee an idle program claims a task whenever any queue is non-empty
     (DESIGN.md §3.6), which is exactly the premise of the Graham bound.
+    Half-run steals (``steal_run_cap > 1``) can pull up to ``cap`` tiles in
+    the last claim, growing the tail term to ``cap·bt``.
     No-steal: run compression drains each owner's whole queue in its first
     idle round, so the bound is O(1) (kernel.STATIC_COMPRESSED_ROUNDS).
     """
     if steal:
-        return _cdiv(n_routed, n_programs) + bt
+        return _cdiv(n_routed, n_programs) + max(1, steal_run_cap) * bt
     # lazy: this module stays jax-free at import time for the host-shim
     # consumers; the static bound is only asked for around a kernel launch
     from repro.pallas_ws.kernel import STATIC_COMPRESSED_ROUNDS
@@ -477,5 +505,14 @@ class MoEDispatchHost(PallasWSHost):
     def __init__(self, backend=None, capacity: int = 4096, **kw):
         super().__init__(backend=backend, capacity=capacity, **kw)
 
-    def put_task(self, task: ExpertTask) -> bool:
-        return self.put(tuple(int(x) for x in task.encode()))
+    def put_task(self, task: ExpertTask, *, strict: bool = False) -> bool:
+        return self.put(tuple(int(x) for x in task.encode()), strict=strict)
+
+    def put_tasks(self, tasks, *, strict: bool = False) -> bool:
+        """Batched Put of one expert's tile segment — one pre-clear pair and
+        one advisory write for the whole segment (amortized synchronization;
+        see :meth:`repro.pallas_ws.host.PallasWSHost.put_segment`)."""
+        return self.put_segment(
+            [tuple(int(x) for x in t.encode()) for t in tasks],
+            strict=strict,
+        )

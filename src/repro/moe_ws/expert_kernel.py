@@ -156,6 +156,7 @@ def run_moe_grad_schedule(
     bt: int,
     steal: bool = True,
     steal_policy: str = "cost",
+    steal_run_cap: int = 1,
     rounds: Optional[int] = None,
     out: Optional[jax.Array] = None,
     mult: Optional[jax.Array] = None,
@@ -185,7 +186,8 @@ def run_moe_grad_schedule(
     execute = functools.partial(_expert_grad_execute, bt=bt)
     return launch_ws_grid(
         state, execute, (tok_idx, x, gy, gate_rows, wg, wu, wd), out,
-        steal=steal, steal_policy=steal_policy, rounds=rounds, mult=mult,
+        steal=steal, steal_policy=steal_policy, steal_run_cap=steal_run_cap,
+        rounds=rounds, mult=mult,
         compress_runs=compress_runs, interpret=interpret, trace=trace,
         trace_capacity=trace_capacity,
     )
@@ -202,6 +204,7 @@ def run_moe_schedule(
     bt: int,
     steal: bool = True,
     steal_policy: str = "cost",
+    steal_run_cap: int = 1,
     rounds: Optional[int] = None,
     out: Optional[jax.Array] = None,
     mult: Optional[jax.Array] = None,
@@ -225,7 +228,8 @@ def run_moe_schedule(
     execute = functools.partial(_expert_execute, bt=bt)
     return launch_ws_grid(
         state, execute, (tok_idx, x, wg, wu, wd), out,
-        steal=steal, steal_policy=steal_policy, rounds=rounds, mult=mult,
+        steal=steal, steal_policy=steal_policy, steal_run_cap=steal_run_cap,
+        rounds=rounds, mult=mult,
         compress_runs=compress_runs, interpret=interpret, trace=trace,
         trace_capacity=trace_capacity, fault_plan=fault_plan,
     )

@@ -111,6 +111,7 @@ class _CoreStatic(NamedTuple):
     n_programs: int
     bt: int
     interpret: bool
+    steal_run_cap: int = 1
 
 
 def _check_drained(state, res) -> None:
@@ -219,7 +220,10 @@ def _dispatch_and_run(static: _CoreStatic, x_flat, idx, gate_vals, wg, wu, wd,
                 cand, cand_live, n_programs,
                 n_tasks=records.shape[0] * records.shape[1],
             )
-        rounds = expert_rounds_bound(T * k, bt, n_queues, n_programs, steal)
+        rounds = expert_rounds_bound(
+            T * k, bt, n_queues, n_programs, steal,
+            steal_run_cap=static.steal_run_cap,
+        )
     else:
         idx_h = np.asarray(jax.device_get(idx))
         gates_h = np.asarray(jax.device_get(gate_vals))
@@ -235,6 +239,7 @@ def _dispatch_and_run(static: _CoreStatic, x_flat, idx, gate_vals, wg, wu, wd,
         bt=bt,
         steal=steal,
         steal_policy=static.steal_policy,
+        steal_run_cap=static.steal_run_cap if steal else 1,
         rounds=rounds,
         interpret=static.interpret,
         trace=trace,
@@ -324,11 +329,14 @@ def _grad_ws(static: _CoreStatic, x_flat, idx, gate_vals, wg, wu, wd, gy):
     state = make_pool_queue_state_jax(
         records, tail, pool_off, routed.loads, P, n_tasks=records.shape[0],
     )
-    rounds = expert_rounds_bound(Tk, bt, E, P, True)
+    rounds = expert_rounds_bound(
+        Tk, bt, E, P, True, steal_run_cap=static.steal_run_cap
+    )
     res = run_moe_grad_schedule(
         state, jnp.asarray(x_flat, jnp.float32), gy,
         routed.tok_idx, routed.gates, wg, wu, wd,
-        bt=bt, steal=True, steal_policy=static.steal_policy, rounds=rounds,
+        bt=bt, steal=True, steal_policy=static.steal_policy,
+        steal_run_cap=static.steal_run_cap, rounds=rounds,
         interpret=static.interpret,
     )
     # an unexecuted grad tile would contribute exactly-zero gradients (the
@@ -432,6 +440,7 @@ def expert_ffn_ws(
     *,
     schedule: str = "ws",
     steal_policy: str = "cost",
+    steal_run_cap: int = 1,
     queue_layout: str | None = None,
     grad_dispatch: str = "dense",
     n_programs: int = 8,
@@ -450,6 +459,7 @@ def expert_ffn_ws(
         n_experts=wg.shape[0], schedule=schedule, steal_policy=steal_policy,
         queue_layout=queue_layout, grad_dispatch=grad_dispatch,
         n_programs=n_programs, bt=bt, interpret=bool(interpret),
+        steal_run_cap=int(steal_run_cap),
     )
     return _moe_ws_core(
         static, jnp.asarray(x), jnp.asarray(idx, jnp.int32),
@@ -465,6 +475,7 @@ def moe_ffn_ws(
     *,
     schedule: str = "ws",
     steal_policy: str = "cost",
+    steal_run_cap: int = 1,
     queue_layout: str | None = None,
     grad_dispatch: str = "dense",
     n_programs: int = 8,
@@ -479,7 +490,10 @@ def moe_ffn_ws(
     kernel and cost accounting — the makespan baseline).  ``steal_policy``
     picks the victim-selection path: ``"cost"`` (default) is the O(1)
     advisory-ranked argmax, ``"scan"`` the PR-1 full sequential scan
-    (DESIGN.md §3.6).  ``bt`` is the expert-tile row count; ``n_programs``
+    (DESIGN.md §3.6).  ``steal_run_cap > 1`` (cost policy) amortizes Steal:
+    one probe claims up to ``min(ceil(rem/2), cap)`` contiguous victim tiles
+    (half-run rule — §3.6); the default ``1`` keeps the bit-identical
+    per-tile lowering.  ``bt`` is the expert-tile row count; ``n_programs``
     the persistent program count.
 
     Accepts tracers: under ``jit``/``scan``/``vmap`` the queues are built by
@@ -520,6 +534,7 @@ def moe_ffn_ws(
         n_experts=cfg.n_experts, schedule=schedule, steal_policy=steal_policy,
         queue_layout=queue_layout, grad_dispatch=grad_dispatch,
         n_programs=n_programs, bt=bt, interpret=bool(interpret),
+        steal_run_cap=int(steal_run_cap),
     )
     if return_stats:
         # eager telemetry path: same impl, no VJP wrapper in the way

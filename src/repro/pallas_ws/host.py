@@ -120,9 +120,17 @@ class PallasWSHost:
             self.faults_injected["stale_republishes"] += 1
 
     # -- owner ----------------------------------------------------------
-    def put(self, x: Any) -> bool:
+    def put(self, x: Any, *, strict: bool = False) -> bool:
+        """Owner Put of one task.  Returns ``False`` (no state touched) when
+        the queue is full so callers can back off without catching;
+        ``strict=True`` restores the raise for drill suites that treat a
+        full queue as harness misconfiguration."""
         if self.tail + 1 >= self.capacity:
-            raise RuntimeError(f"pallas-ws queue full (capacity={self.capacity})")
+            if strict:
+                raise RuntimeError(
+                    f"pallas-ws queue full (capacity={self.capacity})"
+                )
+            return False
         pid = self.OWNER
         self.tasks.write(self.tail, x, pid)  # line 2 (task slot)
         if self.tail + 2 < self.capacity:
@@ -132,6 +140,37 @@ class PallasWSHost:
             self.tasks.write(self.tail + 2, BOTTOM, pid)
         self.tail += 1  # line 1 ordering is owner-local, no fence needed
         self._advise(_cost_of(x), pid)
+        return True
+
+    def put_segment(self, xs, *, strict: bool = False) -> bool:
+        """Batched owner Put (amortized synchronization, DESIGN.md §3.6):
+        append a whole segment of tasks with one record write per task, ONE
+        pre-clear pair past the segment, one owner-local tail bump, and ONE
+        advisory update for the segment's total cost — versus per-task
+        pre-clears and advisories from looped :meth:`put`.  All-or-none:
+        returns ``False`` (no state touched) unless the whole segment fits.
+        Same Fig. 7 layout and same final state as the put loop; only the
+        shared-access *count* shrinks, which is the point."""
+        xs = list(xs)
+        n = len(xs)
+        if n == 0:
+            return True
+        if self.tail + n >= self.capacity:
+            if strict:
+                raise RuntimeError(
+                    f"pallas-ws queue full (capacity={self.capacity}, "
+                    f"segment={n})"
+                )
+            return False
+        pid = self.OWNER
+        for i, x in enumerate(xs):
+            self.tasks.write(self.tail + i, x, pid)  # line 2, batched
+        for c in (self.tail + n, self.tail + n + 1):
+            # pre-clear invariant published once per segment, not per task
+            if c < self.capacity:
+                self.tasks.write(c, BOTTOM, pid)
+        self.tail += n  # one owner-local bump for the whole segment
+        self._advise(sum(_cost_of(x) for x in xs), pid)
         return True
 
     def take(self) -> Any:

@@ -85,6 +85,7 @@ from ..wstrace.ring import (
     EV_MULT,
     EV_OP,
     EV_PROG,
+    EV_RUN,
     EV_QUEUE,
     EV_ROUND,
     EV_SLOT,
@@ -163,14 +164,14 @@ def ws_try_extract(
     r, p, head_ref, local_head_ref, tail_ref, remaining_ref, tasks_ref,
     clock_ref, pool_off_ref=None, stage_ref=None,
     *, n_queues: int, capacity: int, steal: bool,
-    steal_policy: str = "cost", pool: bool = False,
+    steal_policy: str = "cost", pool: bool = False, steal_run_cap: int = 1,
 ):
     """One Take/Steal attempt of WS-WMULT for program ``p`` at round ``r``.
 
     Probes its own queue first; when stealing, picks further victims by the
     configured policy and claims the first live slot with plain writes only.
-    Returns ``(found, queue, slot, slots_read)``; no-op (found=False) while
-    the program's clock says it is still busy with its previous tile.
+    Returns ``(found, queue, slot, run, slots_read)``; no-op (found=False)
+    while the program's clock says it is still busy with its previous tile.
 
     ``stage_ref`` (optional, [n_queues] int32): per-queue open rounds for
     stage-gated launches (the unified engine step) — a queue is invisible to
@@ -178,8 +179,25 @@ def ws_try_extract(
     pure *input* (no cross-program signalling): the stage windows are sized
     on the host by the Graham bound so every task of stage ``s`` has
     finished before ``stage_ref`` opens stage ``s+1`` (DESIGN.md §5).
+
+    ``steal_run_cap > 1`` (cost policy only) amortizes Steal probes: one
+    successful victim probe claims ``min(ceil(rem/2), cap)`` *contiguous*
+    slots — the half-run rule of ``mesh_ws/steal`` brought on device — with
+    a single head-bump past the whole run.  ``rem = tail[v] - h`` is exact
+    with respect to the tails (Put happens before launch, so tails are a
+    static input); only *head* staleness can inflate it, and a stale head
+    means the run's slots were already claimed once — re-executing them is
+    a multiplicity event, never a correctness event (every claimed slot
+    ``< tail[v]`` holds a live record by the compacted-prefix invariant, so
+    the single ⊥-probe of the run's first slot certifies the whole run).
+    ``run`` is 1 for Takes and for the default ``steal_run_cap=1`` lowering,
+    which stays bit-identical to the per-slot claim.
     """
     assert steal_policy in STEAL_POLICIES, steal_policy
+    assert steal_run_cap >= 1, steal_run_cap
+    assert steal_run_cap == 1 or steal_policy == "cost", (
+        "half-run claims are a cost-policy amortization"
+    )
     idle = clock_ref[p] <= r
     probe = functools.partial(
         _probe_slot, tasks_ref, pool_off_ref, tail_ref,
@@ -217,7 +235,8 @@ def ws_try_extract(
 
         n_scan = n_queues if steal else 1
         zero = (jnp.bool_(False), jnp.int32(0), jnp.int32(0), jnp.int32(0))
-        return jax.lax.fori_loop(0, n_scan, scan_one, zero)
+        found, fq, fs, nread = jax.lax.fori_loop(0, n_scan, scan_one, zero)
+        return found, fq, fs, jnp.int32(1), nread
 
     def cost_extract():
         """O(1) policy: own-queue probe, then cost-aware victim argmax."""
@@ -231,7 +250,7 @@ def ws_try_extract(
             claim_writes(own, h0)
 
         if not steal:
-            return own_live, own, h0, issued0
+            return own_live, own, h0, jnp.int32(1), issued0
 
         # Victim selection from plain vector reads — no slot loads.  The
         # `heads < tails` mask is exact for any state the protocol can
@@ -251,16 +270,34 @@ def ws_try_extract(
         op, issued = probe(v, h, can)
         live = can & (op != BOTTOM)
 
-        @pl.when(live)
-        def _steal():
-            claim_writes(v, h)
+        if steal_run_cap == 1:
+            @pl.when(live)
+            def _steal():
+                claim_writes(v, h)
+
+            take = jnp.int32(1)
+        else:
+            # Half-run claim: bump the head past ceil(rem/2) slots (capped)
+            # in one plain write per bound.  `rem >= 1` whenever `live`
+            # (the victim passed the `heads < tails` mask), and every slot
+            # of [h, h + take) is below tail[v], so the run is made of live
+            # records certified by the single probe above.
+            rem = tail_ref[v] - h
+            take = jnp.clip((rem + 1) // 2, 1, steal_run_cap).astype(jnp.int32)
+
+            @pl.when(live)
+            def _steal():
+                head_ref[v] = h + take           # plain write — no CAS
+                local_head_ref[p, v] = h + take  # persistent local bound
 
         found = own_live | live
         fq = jnp.where(own_live, own, v)
         fs = jnp.where(own_live, h0, h)
-        return found, fq, fs, issued0 + issued
+        run = jnp.where(live, take, 1).astype(jnp.int32)
+        return found, fq, fs, run, issued0 + issued
 
-    zero = (jnp.bool_(False), jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    zero = (jnp.bool_(False), jnp.int32(0), jnp.int32(0), jnp.int32(1),
+            jnp.int32(0))
     body = scan_extract if steal_policy == "scan" else cost_extract
     return jax.lax.cond(idle, body, lambda: zero)
 
@@ -304,6 +341,7 @@ def _generic_ws_kernel(
     steal_policy: str,
     pool: bool,
     compress: bool,
+    steal_run_cap: int = 1,
     n_outs: int = 1,
     multi_out: bool = False,
     staged: bool = False,
@@ -345,7 +383,7 @@ def _generic_ws_kernel(
     r = pl.program_id(0)
     p = pl.program_id(1)
 
-    def trace_append(fq, fs, tid, cost, t0, op):
+    def trace_append(fq, fs, tid, cost, t0, op, run):
         """Append one extraction record to program ``p``'s event ring —
         plain stores only (guarded slot writes + a plain cursor bump), so
         the traced lowering stays inside the fence-free audit.  The ring
@@ -375,10 +413,11 @@ def _generic_ws_kernel(
             ev_ref[p, c, EV_VICTIM] = victim
             ev_ref[p, c, EV_MULT] = mult_ref[tid]
             ev_ref[p, c, EV_OP] = op
+            ev_ref[p, c, EV_RUN] = run
 
         ev_cursor_ref[p] = c + 1
 
-    def account(fq, fs, advisory=True):
+    def account(fq, fs, advisory=True, run=1):
         rec = functools.partial(
             _slot_field, tasks_ref, pool_off_ref, fq, fs, pool=pool
         )
@@ -399,7 +438,7 @@ def _generic_ws_kernel(
             advisory=advisory,
         )
         if trace:
-            trace_append(fq, fs, rec(F_TID), rec(F_COST), t0, rec(F_OP))
+            trace_append(fq, fs, rec(F_TID), rec(F_COST), t0, rec(F_OP), run)
         return rec(F_COST)
 
     if compress:
@@ -450,17 +489,33 @@ def _generic_ws_kernel(
 
         return
 
-    found, fq, fs, nread = ws_try_extract(
+    found, fq, fs, run, nread = ws_try_extract(
         r, p, head_ref, local_head_ref, tail_ref, remaining_ref, tasks_ref,
         clock_ref, pool_off_ref, stage_ref,
         n_queues=n_queues, capacity=capacity, steal=steal,
-        steal_policy=steal_policy, pool=pool,
+        steal_policy=steal_policy, pool=pool, steal_run_cap=steal_run_cap,
     )
     scanned_ref[p] = scanned_ref[p] + nread
 
-    @pl.when(found)
-    def _execute():
-        account(fq, fs)
+    if steal_run_cap == 1:
+        @pl.when(found)
+        def _execute():
+            account(fq, fs)
+    else:
+        # Half-run execution (amortized synchronization, DESIGN.md §3.6):
+        # the claim above already bumped the head past the whole run, so
+        # execute its `run` consecutive slots back-to-back inside this grid
+        # cell — per-slot events/counters keep the trace and multiplicity
+        # semantics of per-slot claims, while the advisory decrement
+        # coalesces into ONE plain write for the run (bit-identical to the
+        # sequential clamps: costs are nonnegative, so the clamp commutes).
+        @pl.when(found)
+        def _execute_run():
+            def body(i, total):
+                return total + account(fq, fs + i, advisory=False, run=run)
+
+            total = jax.lax.fori_loop(0, run, body, jnp.int32(0))
+            remaining_ref[fq] = jnp.maximum(remaining_ref[fq] - total, 0)
 
 
 @dataclass
@@ -539,16 +594,19 @@ STATIC_COMPRESSED_ROUNDS = 2
 
 
 def default_rounds(state: QueueState, steal: bool,
-                   compress_runs: Optional[bool] = None) -> int:
+                   compress_runs: Optional[bool] = None,
+                   steal_run_cap: int = 1) -> int:
     """Static upper bound on rounds to drain every queue (DESIGN.md §3.6).
 
     Stealing: Graham's greedy bound ``ceil(total/P) + max_cost`` — exact for
     this lockstep model because an idle program *always* claims a task when
     any queue is non-empty (the scan policy probes every queue; the cost
     policy's ``head < tail`` victim mask is exact), so no extra slack is
-    needed.  No-steal: run compression drains each owner's queue in its
-    first idle round, so the bound is O(1); without compression the heaviest
-    queue runs alone (``max queue cost`` rounds).
+    needed.  With half-run steals (``steal_run_cap > 1``) the last claim can
+    pull up to ``steal_run_cap`` slots at once, so the tail term grows to
+    ``steal_run_cap * max_cost``.  No-steal: run compression drains each
+    owner's queue in its first idle round, so the bound is O(1); without
+    compression the heaviest queue runs alone (``max queue cost`` rounds).
 
     Needs concrete queue contents — trace-built states must pass an explicit
     static worst-case ``rounds`` to the launch (the grid size cannot depend
@@ -569,7 +627,7 @@ def default_rounds(state: QueueState, steal: bool,
 
     mc = max_cost(state.task_list) if state.task_list else int(costs.max())
     if steal:
-        return -(-total // state.n_programs) + mc
+        return -(-total // state.n_programs) + max(1, steal_run_cap) * mc
     if compress:
         return STATIC_COMPRESSED_ROUNDS
     return int(costs.max())
@@ -583,6 +641,7 @@ def launch_ws_grid(
     *,
     steal: bool = True,
     steal_policy: str = "cost",
+    steal_run_cap: int = 1,
     rounds: Optional[int] = None,
     mult: Optional[jax.Array] = None,
     compress_runs: Optional[bool] = None,
@@ -626,6 +685,15 @@ def launch_ws_grid(
     (the default) adds no refs and no kernel code: the lowering is
     bit-identical to the untraced build.
 
+    ``steal_run_cap`` (cost policy, steal launches) caps the half-run Steal:
+    one successful probe claims ``min(ceil(rem/2), cap)`` contiguous victim
+    slots and executes them back-to-back in the claiming grid cell, with ONE
+    coalesced advisory write per run (see :func:`ws_try_extract`).  The
+    default ``1`` lowers bit-identically to the per-slot claim; ``> 1`` is
+    incompatible with ``stage_open`` (the Graham stage windows assume
+    per-slot claims) and with ``compress_runs``.  The Graham rounds bound
+    and the default trace-ring capacity gain a ``cap`` slack term.
+
     ``fault_plan`` (a :class:`repro.chaos.FaultPlan`, optional) injects
     the plan's *launch-time* faults as initial array values only: program
     stalls become nonzero initial ``clock`` entries (a stalled program is
@@ -645,11 +713,21 @@ def launch_ws_grid(
     if stage_open is not None and compress:
         raise ValueError("stage_open needs the per-round lockstep "
                          "(compress_runs=False)")
+    if steal_run_cap < 1:
+        raise ValueError(f"steal_run_cap must be >= 1, got {steal_run_cap}")
+    if steal_run_cap > 1:
+        if not steal or steal_policy != "cost":
+            raise ValueError("steal_run_cap > 1 amortizes cost-policy "
+                             "steals — needs steal=True, steal_policy='cost'")
+        if stage_open is not None:
+            raise ValueError("steal_run_cap > 1 breaks the per-slot-claim "
+                             "assumption of stage_open's Graham windows")
     multi_out = isinstance(out, (tuple, list))
     outs_in = tuple(out) if multi_out else (out,)
     rounds_given = rounds is not None
     rounds = (
-        default_rounds(state, steal, compress_runs=compress)
+        default_rounds(state, steal, compress_runs=compress,
+                       steal_run_cap=steal_run_cap)
         if rounds is None else rounds
     )
     n_tasks = max(1, state.n_tasks)
@@ -669,7 +747,12 @@ def launch_ws_grid(
             if not rounds_given:
                 rounds += fault_plan.max_stall
     if trace_capacity is None:
-        trace_capacity = state.capacity if compress else rounds
+        # per-program events <= rounds for per-slot claims; a run of n slots
+        # keeps its program busy >= n rounds, so runs only shift the bound
+        # by the last (possibly cap-long) run: rounds + cap - 1.
+        trace_capacity = (
+            state.capacity if compress else rounds + steal_run_cap - 1
+        )
     steal_kind = (
         KIND_STEAL_REMOTE if trace_remote
         else (KIND_STEAL_SCAN if steal_policy == "scan" else KIND_STEAL_COST)
@@ -685,6 +768,7 @@ def launch_ws_grid(
         steal_policy=steal_policy,
         pool=pool,
         compress=compress,
+        steal_run_cap=steal_run_cap,
         n_outs=len(outs_in),
         multi_out=multi_out,
         staged=stage_open is not None,
@@ -836,6 +920,7 @@ def run_ws_schedule(
     bk: int,
     steal: bool = True,
     steal_policy: str = "cost",
+    steal_run_cap: int = 1,
     rounds: Optional[int] = None,
     out: Optional[jax.Array] = None,
     mult: Optional[jax.Array] = None,
@@ -864,7 +949,8 @@ def run_ws_schedule(
     )
     return launch_ws_grid(
         state, execute, (q, k, v), out,
-        steal=steal, steal_policy=steal_policy, rounds=rounds, mult=mult,
+        steal=steal, steal_policy=steal_policy, steal_run_cap=steal_run_cap,
+        rounds=rounds, mult=mult,
         compress_runs=compress_runs, interpret=interpret,
         trace=trace, trace_capacity=trace_capacity, fault_plan=fault_plan,
     )

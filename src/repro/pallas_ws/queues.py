@@ -344,6 +344,16 @@ def make_queue_state_jax(
     ``n_tasks`` is the static candidate count sizing the multiplicity
     buffer; dead candidates keep ``mult == 0`` and their ``tid`` is never
     extracted.
+
+    Batched-Put segment-write contract (DESIGN.md §3.6): the whole queue
+    array materializes as *per-queue vectorized writes* — one stable-argsort
+    compaction and one masked store per queue segment, never a store per
+    task — and each queue's ``tail``/``remaining`` advisory is published
+    once per segment (the reductions above), not once per Put.  The
+    downstream :func:`repro.moe_ws.dispatch.route_to_tasks_jax` /
+    ``route_to_tasks_pool_jax`` builders feed this with gather-only
+    segment materialization, so the complete traced Put lowers with zero
+    scatter ops (``benchmarks/zero_cost.py`` audits the lowering text).
     """
     import jax.numpy as jnp
 
@@ -398,6 +408,12 @@ def make_pool_queue_state_jax(
     ``n_tasks`` is the static pool slot count sizing the multiplicity
     buffer — pool slot index == ``tid`` == multiplicity index, so dead
     suffix slots keep ``mult == 0``.
+
+    Batched-Put segment-write contract (DESIGN.md §3.6): the pool builder
+    hands over whole per-expert segments, so this wrapper issues exactly one
+    vectorized record write for the pool plus one publication each of the
+    per-queue ``tail``/``pool_off``/``remaining`` advisories — the traced
+    analogue of :meth:`repro.pallas_ws.host.PallasWSHost.put_segment`.
     """
     import jax.numpy as jnp
 

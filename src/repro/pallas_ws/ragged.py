@@ -111,6 +111,7 @@ def ragged_flash_attention(
     causal: bool = True,
     schedule: str = "ws",
     steal_policy: str = "cost",
+    steal_run_cap: int = 1,
     n_programs: int = 8,
     partition: str = "batch",
     bq: int = 32,
@@ -143,6 +144,7 @@ def ragged_flash_attention(
         state, qp, kp, vp,
         causal=causal, bq=bq, bk=bk,
         steal=(schedule == "ws"), steal_policy=steal_policy,
+        steal_run_cap=steal_run_cap if schedule == "ws" else 1,
         interpret=interpret, trace=trace,
     )
     _check_drained(state, res)
@@ -186,17 +188,20 @@ def emit_decode_tasks_jax(lengths, n_heads: int, bk: int):
 
 
 def decode_rounds_bound(B: int, n_heads: int, S: int, bk: int,
-                        n_queues: int, n_programs: int, steal: bool) -> int:
+                        n_queues: int, n_programs: int, steal: bool,
+                        steal_run_cap: int = 1) -> int:
     """Static worst-case lockstep rounds for a traced decode launch (every
     slot at full cache length ``S``) — the trace-time stand-in for
     :func:`repro.pallas_ws.kernel.default_rounds` (cost unit: kv blocks).
 
     Stealing: Graham's ``ceil(total/P) + max_cost`` with no scan slack —
-    both steal policies claim whenever work exists (DESIGN.md §3.6).
+    both steal policies claim whenever work exists (DESIGN.md §3.6); with
+    half-run steals the tail term grows to ``steal_run_cap · max_cost``.
     No-steal: run compression drains owners in their first idle round."""
     blocks = max(1, _cdiv(S, bk))
     if steal:
-        return _cdiv(B * n_heads * blocks, n_programs) + blocks
+        return (_cdiv(B * n_heads * blocks, n_programs)
+                + max(1, steal_run_cap) * blocks)
     from .kernel import STATIC_COMPRESSED_ROUNDS
 
     return STATIC_COMPRESSED_ROUNDS
@@ -210,6 +215,7 @@ def ragged_decode_attention(
     *,
     schedule: str = "ws",
     steal_policy: str = "cost",
+    steal_run_cap: int = 1,
     n_programs: int = 8,
     partition: str = "batch",
     bk: int = 64,
@@ -243,7 +249,10 @@ def ragged_decode_attention(
         records, live = emit_decode_tasks_jax(lengths, H, bk)
         cand, cand_live = owner_queue_candidates(records, live, n_queues)
         state = make_queue_state_jax(cand, cand_live, n_programs, n_tasks=B * H)
-        rounds = decode_rounds_bound(B, H, S, bk, n_queues, n_programs, steal)
+        rounds = decode_rounds_bound(
+            B, H, S, bk, n_queues, n_programs, steal,
+            steal_run_cap=steal_run_cap if steal else 1,
+        )
         tasks = None
     else:
         lengths = np.asarray(lengths, dtype=np.int64)
@@ -257,7 +266,8 @@ def ragged_decode_attention(
     res = run_ws_schedule(
         state, q4, kp, vp,
         causal=False, bq=1, bk=bk,
-        steal=steal, steal_policy=steal_policy, rounds=rounds,
+        steal=steal, steal_policy=steal_policy,
+        steal_run_cap=steal_run_cap if steal else 1, rounds=rounds,
         interpret=interpret, trace=trace,
     )
     if traced:

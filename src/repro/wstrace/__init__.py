@@ -21,6 +21,8 @@ _EXPORTS = {
     "EV_KIND": ".ring",
     "EV_VICTIM": ".ring",
     "EV_MULT": ".ring",
+    "EV_OP": ".ring",
+    "EV_RUN": ".ring",
     "KIND_TAKE": ".ring",
     "KIND_STEAL_SCAN": ".ring",
     "KIND_STEAL_COST": ".ring",

@@ -43,6 +43,7 @@ from .ring import (
     EV_PROG,
     EV_QUEUE,
     EV_ROUND,
+    EV_RUN,
     EV_SLOT,
     EV_TID,
     EV_VICTIM,
@@ -89,7 +90,8 @@ def to_perfetto(trace) -> dict:
             "ts": t0, "dur": max(cost, 1),
             "name": f"{kname} q{q}", "cat": kname,
             "args": {"queue": q, "slot": slot, "task": tid,
-                     "multiplicity": mult, "victim": victim},
+                     "multiplicity": mult, "victim": victim,
+                     "run": int(ev[EV_RUN])},
         })
         if kind == KIND_TAKE:
             continue

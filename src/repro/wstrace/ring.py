@@ -34,6 +34,10 @@ EV_MULT    the task's multiplicity counter *after* this execution
 EV_OP      the claimed record's op id (``tasks.F_OP``) — identifies the task
            family of the event, so a mixed-mode launch (unified engine step)
            decodes into per-family timelines
+EV_RUN     slots claimed by the extraction this event belongs to — 1 for
+           single-slot Take/Steal, the half-run length for amortized steals
+           (``steal_run_cap > 1``), where one probe claims a contiguous run
+           and every slot of the run records the same run length
 =========  ================================================================
 """
 
@@ -41,9 +45,9 @@ from __future__ import annotations
 
 import numpy as np
 
-EVENT_WIDTH = 10
+EVENT_WIDTH = 11
 (EV_ROUND, EV_PROG, EV_QUEUE, EV_SLOT, EV_TID, EV_COST, EV_KIND, EV_VICTIM,
- EV_MULT, EV_OP) = range(EVENT_WIDTH)
+ EV_MULT, EV_OP, EV_RUN) = range(EVENT_WIDTH)
 
 KIND_TAKE = 0
 KIND_STEAL_SCAN = 1
@@ -68,11 +72,11 @@ def decode_rings(events, cursor):
     cursor = np.asarray(cursor)
     n_programs, capacity, width = events.shape
     assert width == EVENT_WIDTH, events.shape
-    rows = [events[p, : min(int(cursor[p]), capacity)] for p in range(n_programs)]
-    stream = (
-        np.concatenate(rows, axis=0)
-        if rows else np.zeros((0, EVENT_WIDTH), np.int32)
-    )
+    # Row-major boolean selection over [P, cap] is exactly the per-program
+    # prefix concatenation (program-major, slot order preserved) the old
+    # Python loop produced — one vectorized gather instead of P slices.
+    valid = np.arange(capacity)[None, :] < np.minimum(cursor, capacity)[:, None]
+    stream = events[valid].reshape(-1, EVENT_WIDTH)
     if stream.size:
         order = np.lexsort((stream[:, EV_PROG], stream[:, EV_ROUND]))
         stream = stream[order]

@@ -103,32 +103,34 @@ def _moe_problem(seed):
     return x, w, bt, tasks, routed, state
 
 
-def _moe_launch(x, routed, w, bt, policy="cost"):
+def _moe_launch(x, routed, w, bt, policy="cost", steal_run_cap=1):
     def launch(state, *, rounds, out, mult, fault_plan):
         return run_moe_schedule(
             state, x, routed.tok_idx, *w, bt=bt, steal=True,
             steal_policy=policy, rounds=rounds, out=out,
             mult=None if mult is None else jnp.asarray(mult),
-            trace=True, fault_plan=fault_plan,
+            steal_run_cap=steal_run_cap, trace=True, fault_plan=fault_plan,
         )
     return launch
 
 
-def check_moe_chaos(seed, policy="cost"):
+def check_moe_chaos(seed, policy="cost", steal_run_cap=1):
     """Any seeded plan through the moe megakernel: checker-clean, and the
     faulted accumulation is the BITWISE float replay of the fault-free
     output times the multiplicity (moe rows are single-source)."""
     x, w, bt, tasks, routed, state = _moe_problem(seed)
     plan = FaultPlan.from_seed(seed, n_programs=P)
-    rounds = default_rounds(state, steal=True)
+    rounds = default_rounds(state, steal=True, steal_run_cap=steal_run_cap)
     oracle = run_moe_schedule(
         copy_state(state), x, routed.tok_idx, *w, bt=bt, steal=True,
-        steal_policy=policy, rounds=rounds,
+        steal_policy=policy, rounds=rounds, steal_run_cap=steal_run_cap,
     )
     assert (oracle.mult[: state.n_tasks] == 1).all()
 
-    chaos = run_with_faults(state, _moe_launch(x, routed, w, bt, policy),
-                            plan, rounds=rounds)
+    chaos = run_with_faults(
+        state, _moe_launch(x, routed, w, bt, policy,
+                           steal_run_cap=steal_run_cap),
+        plan, rounds=rounds)
     row_mult = row_divisor(tasks, chaos.res.mult, routed.n_rows)
     report = SafetyChecker().check(
         chaos, n_tasks=state.n_tasks,
@@ -207,6 +209,39 @@ def test_moe_chaos_seeded(seed):
 @pytest.mark.parametrize("seed", range(2))
 def test_attention_chaos_seeded(seed):
     check_attention_chaos(seed)
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_moe_chaos_halfrun_seeded(seed):
+    """Half-run claims under the full fault battery: kills mid-run, head
+    rewinds that re-arm whole claimed runs, garbage advisories — still
+    checker-clean with bitwise normalized parity."""
+    check_moe_chaos(seed, steal_run_cap=4)
+
+
+def test_storm_halfrun_produces_real_duplication():
+    """A head-rewind storm against run-length claims: the rewound head
+    re-arms slots a thief already claimed as part of a run, so the relaunch
+    duplicates real work (max_mult ≥ 2) and normalization must still
+    recover the fault-free answer bitwise."""
+    x, w, bt, tasks, routed, state = _moe_problem(3)
+    plan = FaultPlan(seed=3, kills=(1,), storms=1, full_first_storm=True)
+    rounds = default_rounds(state, steal=True, steal_run_cap=4)
+    oracle = run_moe_schedule(
+        copy_state(state), x, routed.tok_idx, *w, bt=bt, steal=True,
+        rounds=rounds, steal_run_cap=4,
+    )
+    chaos = run_with_faults(
+        state, _moe_launch(x, routed, w, bt, steal_run_cap=4), plan,
+        rounds=rounds)
+    report = SafetyChecker().check(
+        chaos, n_tasks=state.n_tasks,
+        oracle_accumulated=np.asarray(oracle.out),
+        row_mult=row_divisor(tasks, chaos.res.mult, routed.n_rows),
+    )
+    assert report.ok, report.summary()
+    assert report.max_mult >= 2, "the full storm re-armed nothing"
+    assert report.normalized_parity == "bitwise"
 
 
 def test_storm_plan_produces_real_duplication():

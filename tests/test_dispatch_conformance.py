@@ -311,7 +311,7 @@ def check_pool_layout_conformance(draw_int):
 
 
 def check_adversarial_schedules(draw_int, draw_bool, steal_policy="cost",
-                                layout="padded"):
+                                layout="padded", steal_run_cap=1):
     E, T, k, bt, seed, idx, gates = _routing_from(draw_int)
     d, f = 4, 8
     ks = jax.random.split(jax.random.PRNGKey(seed % 997), 4)
@@ -330,13 +330,14 @@ def check_adversarial_schedules(draw_int, draw_bool, steal_policy="cost",
     loads = np.bincount(idx.reshape(-1), minlength=E)
     tiles_per_e = _cdiv(min(T, T * k), bt)  # top-k: distinct experts/token
     remap = _tid_remap(loads, bt, tiles_per_e, layout)
-    rounds = expert_rounds_bound(T * k, bt, E, P, steal=True)
+    rounds = expert_rounds_bound(T * k, bt, E, P, steal=True,
+                                 steal_run_cap=steal_run_cap)
 
     def launch(state, tok_idx, out=None, mult=None, r=rounds):
         return run_moe_schedule(
             state, x, jnp.asarray(tok_idx), *w, bt=bt, steal=True,
             steal_policy=steal_policy, rounds=r, out=out, mult=mult,
-            interpret=True,
+            steal_run_cap=steal_run_cap, interpret=True,
         )
 
     res_h = launch(sh, routed_h.tok_idx)
@@ -463,11 +464,16 @@ if HAVE_HYPOTHESIS:
 
     @given(data=st.data())
     def test_adversarial_schedules_identical_runs_and_exact_combines(data):
+        policy = data.draw(st.sampled_from(["cost", "scan"]))
+        # half-run claims require the cost policy (victim bounds feed the
+        # run length); cap=1 keeps scan-policy draws on the per-slot path
+        cap = data.draw(st.sampled_from([1, 2, 4])) if policy == "cost" else 1
         check_adversarial_schedules(
             lambda lo, hi: data.draw(st.integers(lo, hi)),
             lambda: data.draw(st.booleans()),
-            steal_policy=data.draw(st.sampled_from(["cost", "scan"])),
+            steal_policy=policy,
             layout=data.draw(st.sampled_from(["padded", "pool"])),
+            steal_run_cap=cap,
         )
 
     @given(data=st.data())
@@ -507,6 +513,17 @@ def test_adversarial_schedules_seeded(seed, layout, steal_policy):
     draw_int, draw_bool = _rng_draws(100 + seed)
     check_adversarial_schedules(draw_int, draw_bool,
                                 steal_policy=steal_policy, layout=layout)
+
+
+@pytest.mark.parametrize("layout", ["padded", "pool"])
+@pytest.mark.parametrize("seed", range(2))
+def test_adversarial_schedules_halfrun_seeded(seed, layout):
+    """The conformance contract survives run-length claims: padded and pool
+    layouts stay slot-for-slot identical under steal_run_cap=4, including
+    through drawn head-rewind relaunches."""
+    draw_int, draw_bool = _rng_draws(900 + seed)
+    check_adversarial_schedules(draw_int, draw_bool, steal_policy="cost",
+                                layout=layout, steal_run_cap=4)
 
 
 @pytest.mark.parametrize("seed", range(4))

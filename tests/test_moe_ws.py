@@ -281,6 +281,28 @@ def test_moe_host_weak_multiplicity_random_schedules(seed):
     check_owner_fifo(records)             # owner respects put order
 
 
+def test_moe_host_put_tasks_segment_matches_put_task_loop():
+    """Batched expert-segment Put (amortized synchronization): identical
+    final state to the task-at-a-time loop, all-or-none on overflow."""
+    tasks = [ExpertTask(expert=0, row_start=4 * i, row_len=4, tid=i, cost=4)
+             for i in range(12)]
+    a = MoEDispatchHost(capacity=64)
+    b = MoEDispatchHost(capacity=64)
+    for t in tasks:
+        assert a.put_task(t)
+    assert b.put_tasks(tasks)
+    assert a.snapshot() == b.snapshot()
+    assert a.remaining_estimate() == b.remaining_estimate()
+    assert [b.take() for _ in tasks] == [
+        tuple(int(v) for v in t.encode()) for t in tasks]
+    # all-or-none: a segment that does not fit leaves the queue untouched
+    c = MoEDispatchHost(capacity=8)
+    assert not c.put_tasks(tasks)
+    assert c.snapshot() == (0, 0, {})
+    with pytest.raises(RuntimeError):
+        c.put_tasks(tasks, strict=True)
+
+
 def test_moe_host_registered_in_core_registry():
     q = ALGORITHMS["moe-ws"]()
     payloads = [_expert_payload(i) for i in range(16)]

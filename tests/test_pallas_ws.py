@@ -120,6 +120,83 @@ def test_host_announcement_row_records_extractors():
     assert taken == {(0, 0): 0, (2, 1): 2, (1, 2): 1}
 
 
+def test_host_put_full_is_a_verdict_not_an_exception():
+    """The declared `-> bool` contract: a full queue makes `put` return
+    False with no state touched (`strict=True` restores the raise).  The
+    two-⊥-slot pre-clear invariant caps the fill at capacity-1 tasks and
+    survives the last accepted Put."""
+    from repro.core.backend import BOTTOM
+
+    q = PallasWSHost(capacity=8)
+    accepted = 0
+    while q.put(accepted):
+        accepted += 1
+    assert accepted == q.capacity - 1
+    # the rejected put touched nothing
+    head, tail, taken = q.snapshot()
+    assert (head, tail, taken) == (0, q.capacity - 1, {})
+    assert q.remaining_estimate() == accepted  # advisory not bumped
+    with pytest.raises(RuntimeError):
+        q.put(99, strict=True)
+    # the slot past the last accepted task still reads ⊥
+    assert q.tasks.read(q.tail, q.OWNER) is BOTTOM
+    # and the accepted prefix drains FIFO, exactly
+    assert [q.take() for _ in range(accepted)] == list(range(accepted))
+    assert q.take() is EMPTY
+
+
+def test_host_put_segment_matches_put_loop():
+    """Batched Put is a pure access-count optimization: the final queue
+    state (head, tail, announcements, advisory, payload order) is
+    identical to the task-at-a-time loop."""
+    xs = list(range(10))
+    a = PallasWSHost(capacity=32)
+    b = PallasWSHost(capacity=32)
+    for x in xs:
+        assert a.put(x)
+    assert b.put_segment(xs)
+    assert a.snapshot() == b.snapshot()
+    assert a.remaining_estimate() == b.remaining_estimate()
+    assert [b.take() for _ in xs] == xs
+    assert b.take() is EMPTY
+
+
+def test_host_put_segment_all_or_none():
+    q = PallasWSHost(capacity=8)
+    assert q.put_segment([])          # empty segment: trivial success
+    assert q.put_segment([1, 2, 3])
+    # 5 more would need tail 8 >= capacity: rejected with nothing written
+    assert not q.put_segment([4, 5, 6, 7, 8])
+    assert q.tail == 3 and q.remaining_estimate() == 3
+    # 4 more exactly fill to the capacity-1 bound put itself enforces
+    assert q.put_segment([4, 5, 6, 7])
+    assert q.tail == q.capacity - 1
+    with pytest.raises(RuntimeError):
+        q.put_segment([9], strict=True)
+    assert [q.take() for _ in range(7)] == [1, 2, 3, 4, 5, 6, 7]
+
+
+def test_host_put_segment_amortizes_shared_writes():
+    """The amortization claim, counted: one pre-clear pair + ONE advisory
+    per segment instead of per task — strictly fewer shared-array writes
+    for the same final state, still zero RMWs and zero lock acquisitions."""
+    instrument = pytest.importorskip("benchmarks.instrument")
+    n = 16
+    cb_loop = instrument.CountingBackend()
+    q_loop = PallasWSHost(backend=cb_loop, capacity=64)
+    for i in range(n):
+        assert q_loop.put(i)
+    cb_seg = instrument.CountingBackend()
+    q_seg = PallasWSHost(backend=cb_seg, capacity=64)
+    assert q_seg.put_segment(range(n))
+    loop, seg = cb_loop.counts.snapshot(), cb_seg.counts.snapshot()
+    assert q_loop.snapshot() == q_seg.snapshot()
+    assert seg["writes"] < loop["writes"]
+    assert seg["writes"] <= n + 3  # n records + 2 pre-clears + 1 advisory
+    for counts in (loop, seg):
+        assert counts["rmws"] == 0 and counts["locks"] == 0
+
+
 # ---------------------------------------------------------------------------
 # 2. ragged attention == dense oracle
 # ---------------------------------------------------------------------------

@@ -158,6 +158,38 @@ def test_unified_trace_off_matches_trace_on():
 
 
 # ---------------------------------------------------------------------------
+# stage-assembly memoization: one build per unique length vector
+
+
+def test_unified_stage_assembly_memoized():
+    """Multi-step decode rebuilds the task stages only when the length
+    vector (or pending-admission shape) changes: repeated steps at the same
+    key hit the cache, and the reuse is bitwise invisible in the logits."""
+    from repro.models.unified import clear_stage_cache, stage_cache_stats
+
+    cfg, params, caches, tok, pos = _setup("llama3.2-3b")
+    clear_stage_cache()
+    l0, c0, _ = decode_step_unified(params, cfg, caches, tok, pos)
+    assert stage_cache_stats() == {"builds": 1, "hits": 0}
+    l1, _, _ = decode_step_unified(params, cfg, caches, tok, pos)
+    assert stage_cache_stats() == {"builds": 1, "hits": 1}
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+    # advancing the decode: a new length vector is exactly one more build,
+    # and repeats at the new key hit again
+    pos2 = pos + 1
+    decode_step_unified(params, cfg, c0, tok, pos2)
+    decode_step_unified(params, cfg, c0, tok, pos2)
+    assert stage_cache_stats() == {"builds": 2, "hits": 2}
+    # folding in a prefill changes the pending-admission shape: new key
+    ptok = jnp.asarray(np.array([[11, 12, 13, 14, 15, 16, 17, 18]], np.int32))
+    decode_step_unified(params, cfg, c0, tok, pos2, prefill_tokens=ptok,
+                        bq=8, bk=8)
+    assert stage_cache_stats() == {"builds": 3, "hits": 2}
+    clear_stage_cache()
+    assert stage_cache_stats() == {"builds": 0, "hits": 0}
+
+
+# ---------------------------------------------------------------------------
 # gate
 
 

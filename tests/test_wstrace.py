@@ -50,6 +50,7 @@ from repro.wstrace.ring import (  # noqa: E402
     EV_PROG,
     EV_QUEUE,
     EV_ROUND,
+    EV_RUN,
     EV_SLOT,
     EV_VICTIM,
     EVENT_WIDTH,
@@ -206,6 +207,89 @@ if HAVE_HYPOTHESIS:
             idx[i, 0] = data.draw(st.integers(0, E - 1))
         gates = np.ones((T, 1), np.float32)
         check_steal_provenance(idx, gates, E, 2, policy, seed=E)
+
+
+# ---------------------------------------------------------------------------
+# vectorized ring decode — bit parity with the per-ring loop it replaced
+# ---------------------------------------------------------------------------
+
+
+def _decode_rings_loop_ref(events, cursor):
+    """The retired per-(program, slot) Python loop, kept as the oracle."""
+    events = np.asarray(events)
+    cursor = np.asarray(cursor)
+    n_programs, cap, width = events.shape
+    rows = []
+    for p in range(n_programs):
+        for c in range(min(int(cursor[p]), cap)):
+            rows.append(events[p, c])
+    stream = (np.stack(rows) if rows
+              else np.empty((0, width), dtype=events.dtype))
+    if len(stream):
+        order = np.lexsort((stream[:, EV_PROG], stream[:, EV_ROUND]))
+        stream = stream[order]
+    dropped = np.maximum(cursor.astype(np.int64) - cap, 0)
+    return stream, dropped
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_decode_rings_matches_loop_reference(seed):
+    """Random rings with partial fills and overflowed cursors: the masked
+    one-shot decode returns the loop's stream bit for bit (same row order
+    into the same stable lexsort) and the same per-program drop counts."""
+    rng = np.random.RandomState(seed)
+    n_programs = rng.randint(1, 6)
+    cap = rng.randint(1, 9)
+    events = rng.randint(
+        0, 50, size=(n_programs, cap, EVENT_WIDTH)).astype(np.int32)
+    cursor = rng.randint(0, 2 * cap + 1, size=(n_programs,)).astype(np.int32)
+    s_vec, d_vec = decode_rings(events, cursor)
+    s_ref, d_ref = _decode_rings_loop_ref(events, cursor)
+    np.testing.assert_array_equal(s_vec, s_ref)
+    np.testing.assert_array_equal(d_vec, d_ref)
+
+
+def test_decode_rings_empty_cursor():
+    events = np.zeros((3, 4, EVENT_WIDTH), np.int32)
+    stream, dropped = decode_rings(events, np.zeros(3, np.int32))
+    assert stream.shape == (0, EVENT_WIDTH)
+    assert (dropped == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# half-run claims in the stream: per-slot events, amortized probes
+# ---------------------------------------------------------------------------
+
+
+def test_halfrun_trace_stream_balances_counters():
+    """steal_run_cap>1 amortizes probes, not records: every slot of a
+    claimed run still emits its own event (EV_RUN carries the run length),
+    so all stream-vs-counter invariants hold unchanged — while the scanned
+    counter, not the stream, shrinks."""
+    T, E, k, bt = 24, 6, 1, 4
+    idx = np.zeros((T, k), np.int32)  # one hot queue -> guaranteed steals
+    gates = np.ones((T, k), np.float32)
+    from repro.pallas_ws.kernel import default_rounds
+
+    # the SAME round budget for both lowerings: probe traffic accumulates
+    # per round, so the comparison must be launch-for-launch fair
+    rounds = default_rounds(_moe_setup(idx, gates, E, bt)[4],
+                            steal=True, steal_run_cap=4)
+    state, res = _run_traced(idx, gates, E, bt, "cost",
+                             steal_run_cap=4, rounds=rounds)
+    stream = _check_stream_vs_counters(state, res)
+    assert (stream[:, EV_RUN] >= 1).all()
+    run_of_steals = stream[np.isin(stream[:, EV_KIND], STEAL_KINDS), EV_RUN]
+    assert (run_of_steals > 1).any(), "half-run claims must appear"
+    takes = stream[stream[:, EV_KIND] == KIND_TAKE, EV_RUN]
+    assert (takes == 1).all(), "owner Takes stay per-slot"
+    # the amortization is visible in probe traffic at the same stream size
+    state1, res1 = _run_traced(idx, gates, E, bt, "cost",
+                               steal_run_cap=1, rounds=rounds)
+    assert res.extractions == res1.extractions == _check_stream_vs_counters(
+        state1, res1).shape[0]
+    assert res.slots_scanned <= res1.slots_scanned
+    assert (_check_stream_vs_counters(state1, res1)[:, EV_RUN] == 1).all()
 
 
 # ---------------------------------------------------------------------------
